@@ -1,0 +1,72 @@
+"""Shared benchmark machinery: datasets, timing, measurement records."""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core import ALL_COMPRESSORS
+from repro.data.synth import DATASETS, load_dataset
+
+MIB = float(1 << 20)
+
+
+@dataclass
+class Measurement:
+    dataset: str
+    compressor: str
+    ratio: float
+    comp_mib_s: float
+    decomp_mib_s: float
+    access_ns: float
+    train_s: float
+    dict_total_mib: float
+    dict_data_mib: float
+    parse_s: float
+
+
+def measure(name: str, strings: list[bytes], n_queries: int = 20000,
+            seed: int = 0, **kw) -> Measurement:
+    raw = sum(len(s) for s in strings)
+    comp = ALL_COMPRESSORS[name](**kw) if kw else ALL_COMPRESSORS[name]()
+    stats = comp.train(strings, raw)
+    t0 = time.perf_counter()
+    corpus = comp.compress(strings)
+    parse_s = time.perf_counter() - t0
+    comp_total = stats.train_seconds + parse_s
+
+    t0 = time.perf_counter()
+    out = comp.decompress_all(corpus)
+    dec_s = time.perf_counter() - t0
+    assert out == b"".join(strings), f"{name}: roundtrip mismatch"
+
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, len(strings), n_queries)
+    t0 = time.perf_counter()
+    for i in idx:
+        comp.access(corpus, int(i))
+    access_ns = (time.perf_counter() - t0) / n_queries * 1e9
+
+    return Measurement(
+        dataset="?", compressor=name, ratio=corpus.ratio,
+        comp_mib_s=raw / MIB / max(comp_total, 1e-9),
+        decomp_mib_s=raw / MIB / max(dec_s, 1e-9),
+        access_ns=access_ns, train_s=stats.train_seconds,
+        dict_total_mib=stats.dict_total_bytes / MIB,
+        dict_data_mib=stats.dict_data_bytes / MIB,
+        parse_s=parse_s)
+
+
+_CACHE: dict = {}
+
+
+def dataset(name: str, target_bytes: int) -> list[bytes]:
+    key = (name, target_bytes)
+    if key not in _CACHE:
+        _CACHE[key] = load_dataset(name, target_bytes)
+    return _CACHE[key]
+
+
+DATASET_NAMES = list(DATASETS)

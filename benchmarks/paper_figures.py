@@ -1,0 +1,129 @@
+"""One benchmark per paper figure (data series, printed as CSV).
+
+Fig 2  — compression ratio & training-data volume vs pair threshold (2..30).
+Fig 3  — cumulative gain & frequency by token length.
+Fig 6  — bucket-size distribution of OnPair16's long-pattern LPM.
+Fig 8  — smoothed token gain by token id (moving average, 1% window).
+Fig 9  — token length distribution: FSST vs OnPair16.
+Fig 10 — cumulative token coverage vs dictionary memory footprint.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import dataset
+from repro.core import (FSSTCompressor, OnPairCompressor, OnPairConfig,
+                        make_onpair, make_onpair16)
+from repro.core.metrics import (bucket_size_histogram, cumulative_coverage,
+                                gain_by_length, gain_by_token,
+                                token_frequencies)
+
+
+def fig2_threshold_sweep(size_mib: int = 4, thresholds=(2, 4, 8, 12, 16, 22, 30)):
+    strings = dataset("book_titles", size_mib << 20)
+    raw = sum(map(len, strings))
+    rows = []
+    for thr in thresholds:
+        comp = OnPairCompressor(OnPairConfig.onpair(threshold=thr,
+                                                    sample_bytes=64 << 20))
+        comp.train(strings, raw)
+        corpus = comp.compress(strings)
+        rows.append({"threshold": thr, "ratio": round(corpus.ratio, 3),
+                     "train_data_mib": round(
+                         comp.train_result.scanned_bytes / (1 << 20), 3)})
+    return rows
+
+
+def _trained16(size_mib=4):
+    strings = dataset("book_titles", size_mib << 20)
+    comp = make_onpair16()
+    comp.train(strings, sum(map(len, strings)))
+    corpus = comp.compress(strings)
+    tokens = np.asarray(corpus.payload.view("<u2"))
+    return strings, comp, corpus, tokens
+
+
+def fig3_gain_by_length(size_mib: int = 4):
+    strings = dataset("book_titles", size_mib << 20)
+    comp = make_onpair()
+    comp.train(strings, sum(map(len, strings)))
+    corpus = comp.compress(strings)
+    tokens = np.asarray(corpus.payload.view("<u2"))
+    table = gain_by_length(comp.dictionary, tokens)
+    total_gain = sum(max(v["gain"], 0) for v in table.values()) or 1
+    total_freq = sum(v["freq"] for v in table.values()) or 1
+    rows, cg, cf = [], 0, 0
+    for L in sorted(table):
+        cg += max(table[L]["gain"], 0)
+        cf += table[L]["freq"]
+        rows.append({"token_len": L,
+                     "cum_gain_frac": round(cg / total_gain, 4),
+                     "cum_freq_frac": round(cf / total_freq, 4)})
+    return rows
+
+
+def fig6_bucket_sizes(size_mib: int = 4):
+    _, comp, _, _ = _trained16(size_mib)
+    hist = bucket_size_histogram(comp.dictionary)
+    total = sum(hist.values()) or 1
+    cum = 0
+    rows = []
+    for size in sorted(hist):
+        cum += hist[size]
+        rows.append({"bucket_size": size, "count": hist[size],
+                     "cum_frac": round(cum / total, 4)})
+    return rows
+
+
+def fig8_smoothed_gain(size_mib: int = 4):
+    strings = dataset("book_titles", size_mib << 20)
+    comp = make_onpair()
+    comp.train(strings, sum(map(len, strings)))
+    corpus = comp.compress(strings)
+    tokens = np.asarray(corpus.payload.view("<u2"))
+    gains = gain_by_token(comp.dictionary, tokens).astype(np.float64)
+    w = max(8, len(gains) // 100)
+    kernel = np.ones(w) / w
+    smooth = np.convolve(gains, kernel, mode="valid")
+    step = max(1, len(smooth) // 64)
+    return [{"token_id": int(i), "smoothed_gain": round(float(smooth[i]), 2)}
+            for i in range(0, len(smooth), step)]
+
+
+def fig9_token_length_distribution(size_mib: int = 4):
+    strings, comp16, corpus16, tokens16 = _trained16(size_mib)
+    lens16 = comp16.dictionary.lens[tokens16]
+    f = FSSTCompressor()
+    f.train(strings, sum(map(len, strings)))
+    cf = f.compress(strings)
+    # FSST decode lengths per code unit
+    starts = np.ones(len(cf.payload), dtype=bool)
+    from repro.core.fsst import _unit_starts
+    starts = _unit_starts(cf.payload)
+    toks = cf.payload[starts]
+    import numpy as _np
+    flens = _np.where(toks == 255, 1, f._lens[toks.astype(_np.int64)])
+    rows = []
+    for L in range(1, 17):
+        rows.append({"token_len": L,
+                     "onpair16_frac": round(float((lens16 == L).mean()), 4),
+                     "fsst_frac": round(float((flens == L).mean()), 4)})
+    avg16 = float(lens16.mean())
+    avgf = float(flens.mean())
+    rows.append({"token_len": "avg", "onpair16_frac": round(avg16, 3),
+                 "fsst_frac": round(avgf, 3)})
+    return rows
+
+
+def fig10_coverage(size_mib: int = 4,
+                   marks=(16 << 10, 32 << 10, 64 << 10, 128 << 10, 256 << 10)):
+    _, comp, _, tokens = _trained16(size_mib)
+    mem, cov = cumulative_coverage(comp.dictionary, tokens)
+    rows = []
+    for m in marks:
+        i = int(np.searchsorted(mem, m))
+        if i >= len(cov):
+            i = len(cov) - 1
+        rows.append({"dict_kib": m >> 10, "coverage": round(float(cov[i]), 4)})
+    return rows

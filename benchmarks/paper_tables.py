@@ -1,0 +1,99 @@
+"""One benchmark per paper table.
+
+Table 1 — OnPair dictionary-size sweep (bits/token 9..17) on Book Titles.
+Table 3 — main comparison: {raw, zlib, zstd, bpe, fsst, onpair, onpair16}
+          x 5 datasets: ratio / comp / decomp / access.
+Table 4 — dictionary memory footprint.
+Table 5 — training vs parsing time breakdown.
+
+Synthetic analogue datasets (repro.data.synth) stand in for the paper's
+corpora; absolute MiB/s are Python-harness-scale but the *orderings and
+ratios* are the reproduced claims (EXPERIMENTS.md §Paper-validation).
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import MIB, DATASET_NAMES, dataset, measure
+from repro.core import OnPairCompressor, OnPairConfig
+from repro.core.metrics import avg_token_length
+
+import numpy as np
+
+
+def table1_dict_size_sweep(size_mib: int = 4, bits_range=range(9, 18)):
+    """name,us_per_call,derived CSV rows; derived = ratio@bits."""
+    strings = dataset("book_titles", size_mib << 20)
+    raw = sum(map(len, strings))
+    rows = []
+    for bits in bits_range:
+        cfg = OnPairConfig.onpair(max_tokens=1 << bits, threshold=2,
+                                  sample_bytes=8 << 20)
+        comp = OnPairCompressor(cfg)
+        st = comp.train(strings, raw)
+        t0 = time.perf_counter()
+        corpus = comp.compress(strings)
+        comp_s = st.train_seconds + time.perf_counter() - t0
+        t0 = time.perf_counter()
+        out = comp.decompress_all(corpus)
+        dec_s = time.perf_counter() - t0
+        assert out == b"".join(strings)
+        rng = np.random.default_rng(0)
+        idx = rng.integers(0, len(strings), 5000)
+        t0 = time.perf_counter()
+        for i in idx:
+            comp.access(corpus, int(i))
+        acc_ns = (time.perf_counter() - t0) / 5000 * 1e9
+        tokens = np.asarray(corpus.payload.view("<u2"))
+        rows.append({
+            "bits": bits, "ratio": round(corpus.ratio, 3),
+            "comp_mib_s": round(raw / MIB / comp_s, 2),
+            "decomp_mib_s": round(raw / MIB / dec_s, 1),
+            "access_ns": round(acc_ns),
+            "dict_mib": round(st.dict_total_bytes / MIB, 4),
+            "token_len": round(avg_token_length(comp.dictionary, tokens), 2),
+        })
+    return rows
+
+
+def table3_main_comparison(size_mib: int = 4,
+                           compressors=("raw", "zlib-block", "zstd-block",
+                                        "bpe", "fsst", "onpair", "onpair16"),
+                           datasets=None):
+    rows = []
+    for ds in datasets or DATASET_NAMES:
+        strings = dataset(ds, size_mib << 20)
+        for name in compressors:
+            m = measure(name, strings)
+            m.dataset = ds
+            rows.append(m)
+    return rows
+
+
+def table4_dict_footprint(size_mib: int = 4, datasets=None):
+    rows = []
+    for ds in datasets or DATASET_NAMES:
+        strings = dataset(ds, size_mib << 20)
+        raw = sum(map(len, strings))
+        for name in ("onpair", "onpair16"):
+            from repro.core import ALL_COMPRESSORS
+            comp = ALL_COMPRESSORS[name]()
+            st = comp.train(strings, raw)
+            rows.append({"dataset": ds, "compressor": name,
+                         "total_mib": round(st.dict_total_bytes / MIB, 3),
+                         "data_mib": round(st.dict_data_bytes / MIB, 3),
+                         "entries": st.dict_entries})
+    return rows
+
+
+def table5_train_parse_breakdown(size_mib: int = 4, datasets=None):
+    rows = []
+    for ds in datasets or DATASET_NAMES:
+        strings = dataset(ds, size_mib << 20)
+        for name in ("onpair", "onpair16"):
+            m = measure(name, strings, n_queries=100)
+            rows.append({"dataset": ds, "compressor": name,
+                         "training_s": round(m.train_s, 3),
+                         "parsing_s": round(m.parse_s, 3)})
+    return rows

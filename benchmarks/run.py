@@ -1,0 +1,167 @@
+"""Benchmark entry point — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (per harness spec): us_per_call
+is the per-string (or per-query) cost of the benchmark's primary operation;
+`derived` carries the table's headline metric.
+
+  PYTHONPATH=src python -m benchmarks.run            # standard (4 MiB/dataset)
+  PYTHONPATH=src python -m benchmarks.run --quick    # CI-sized (1 MiB)
+  PYTHONPATH=src python -m benchmarks.run --full     # paper-scale-ish (16 MiB)
+  PYTHONPATH=src python -m benchmarks.run --only table3,kernels
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+RESULTS = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                       "results", "bench")
+
+
+def _emit(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.3f},{derived}", flush=True)
+
+
+def _dump(name: str, obj) -> None:
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, f"{name}.json"), "w") as f:
+        json.dump(obj, f, indent=1, default=str)
+
+
+def bench_table1(size_mib: int) -> None:
+    from benchmarks.paper_tables import table1_dict_size_sweep
+    rows = table1_dict_size_sweep(size_mib)
+    _dump("table1", rows)
+    for r in rows:
+        _emit(f"table1/bits{r['bits']}", r["access_ns"] / 1e3,
+              f"ratio={r['ratio']};decomp_mib_s={r['decomp_mib_s']};"
+              f"dict_mib={r['dict_mib']};tok_len={r['token_len']}")
+
+
+def bench_table3(size_mib: int) -> None:
+    from benchmarks.paper_tables import table3_main_comparison
+    rows = table3_main_comparison(size_mib)
+    _dump("table3", [vars(m) for m in rows])
+    for m in rows:
+        _emit(f"table3/{m.dataset}/{m.compressor}", m.access_ns / 1e3,
+              f"ratio={m.ratio:.3f};comp_mib_s={m.comp_mib_s:.2f};"
+              f"decomp_mib_s={m.decomp_mib_s:.1f}")
+
+
+def bench_table4(size_mib: int) -> None:
+    from benchmarks.paper_tables import table4_dict_footprint
+    rows = table4_dict_footprint(size_mib)
+    _dump("table4", rows)
+    for r in rows:
+        _emit(f"table4/{r['dataset']}/{r['compressor']}", 0.0,
+              f"total_mib={r['total_mib']};data_mib={r['data_mib']};"
+              f"entries={r['entries']}")
+
+
+def bench_table5(size_mib: int) -> None:
+    from benchmarks.paper_tables import table5_train_parse_breakdown
+    rows = table5_train_parse_breakdown(size_mib)
+    _dump("table5", rows)
+    for r in rows:
+        _emit(f"table5/{r['dataset']}/{r['compressor']}", 0.0,
+              f"training_s={r['training_s']};parsing_s={r['parsing_s']}")
+
+
+def bench_figures(size_mib: int) -> None:
+    from benchmarks import paper_figures as pf
+    for name, fn in [("fig2", pf.fig2_threshold_sweep),
+                     ("fig3", pf.fig3_gain_by_length),
+                     ("fig6", pf.fig6_bucket_sizes),
+                     ("fig8", pf.fig8_smoothed_gain),
+                     ("fig9", pf.fig9_token_length_distribution),
+                     ("fig10", pf.fig10_coverage)]:
+        t0 = time.perf_counter()
+        rows = fn(size_mib)
+        _dump(name, rows)
+        head = rows[0] if rows else {}
+        tail = rows[-1] if rows else {}
+        _emit(name, (time.perf_counter() - t0) * 1e6 / max(1, len(rows)),
+              f"first={head};last={tail}".replace(",", ";"))
+
+
+def bench_kernels(size_mib: int) -> None:
+    """OnPair device-codec throughput (jit ref path; Pallas validated in
+    interpret mode by tests — interpret timing is not meaningful)."""
+    import numpy as np
+
+    from benchmarks.common import dataset
+    from repro.core import make_onpair16
+    from repro.kernels.ops import OnPairDevice
+
+    strings = dataset("book_titles", max(1, size_mib // 2) << 20)
+    comp = make_onpair16(sample_bytes=2 << 20)
+    comp.train(strings)
+    dev = OnPairDevice(comp.dictionary)
+    corpus = comp.compress(strings[:20000])
+    tokens = np.asarray(corpus.payload.view("<u2"), dtype=np.int32)
+    raw = sum(len(s) for s in strings[:20000])
+    # warmup + timed decode
+    dev.decode_stream(tokens, use_pallas=False)
+    t0 = time.perf_counter()
+    out = dev.decode_stream(tokens, use_pallas=False)
+    dt = time.perf_counter() - t0
+    assert out == b"".join(strings[:20000])
+    _emit("kernels/decode_stream_jit", dt / max(1, len(tokens)) * 1e6,
+          f"mib_s={raw / (1 << 20) / dt:.1f}")
+    batch = strings[:256]
+    dev.encode_to_bytes(batch, use_pallas=False)
+    t0 = time.perf_counter()
+    enc = dev.encode_to_bytes(batch, use_pallas=False)
+    dt = time.perf_counter() - t0
+    bb = sum(len(s) for s in batch)
+    _emit("kernels/encode_batch_jit", dt / len(batch) * 1e6,
+          f"mib_s={bb / (1 << 20) / dt:.2f}")
+
+
+def bench_roofline(_size_mib: int) -> None:
+    """Surface the dry-run roofline summary as bench rows."""
+    from repro.launch.roofline import fmt_row, load_records
+    for mesh in ("16x16", "2x16x16"):
+        for rec in load_records(mesh):
+            if rec.get("tag") not in ("", "final"):
+                continue
+            r = fmt_row(rec)
+            tag = rec.get("tag") or "baseline"
+            _emit(f"roofline/{mesh}/{r['arch']}/{r['shape']}/{tag}",
+                  max(r["t_compute_s"], r["t_memory_s"],
+                      r["t_collective_s"]) * 1e6,
+                  f"bottleneck={r['bottleneck']};frac={r['roofline_frac']}")
+
+
+ALL = {
+    "table1": bench_table1,
+    "table3": bench_table3,
+    "table4": bench_table4,
+    "table5": bench_table5,
+    "figures": bench_figures,
+    "kernels": bench_kernels,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    size = 1 if args.quick else (16 if args.full else 4)
+    names = [n.strip() for n in args.only.split(",") if n.strip()] or list(ALL)
+    print("name,us_per_call,derived")
+    for name in names:
+        ALL[name](size)
+
+
+if __name__ == "__main__":
+    main()

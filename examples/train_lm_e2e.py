@@ -1,0 +1,75 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps on an
+OnPair-compressed corpus, with checkpointing and resume.
+
+Uses the mamba2 family at width 512 (the assigned-architecture code path, at
+a CPU-trainable size ~30-100M params depending on flags). The data plane is
+the paper's contribution: the corpus lives compressed in memory and the
+OnPair dictionary IS the tokenizer vocabulary.
+
+  PYTHONPATH=src python examples/train_lm_e2e.py --steps 200
+"""
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.data.corpus import CompressedCorpusStore
+from repro.data.pipeline import BatchSpec, TokenPipeline
+from repro.data.synth import load_dataset
+from repro.models.model import build_params
+from repro.optim.adamw import AdamWConfig, init_state
+from repro.runtime.loop import LoopConfig, TrainLoop
+from repro.train.train_step import make_train_step
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--batch", type=int, default=4)
+ap.add_argument("--seq", type=int, default=256)
+ap.add_argument("--d-model", type=int, default=512)
+ap.add_argument("--layers", type=int, default=8)
+ap.add_argument("--ckpt-dir", default="/tmp/repro_e2e")
+args = ap.parse_args()
+
+# data plane: compressed corpus + OnPair tokenizer
+strings = load_dataset("book_reviews", 2 << 20)
+store = CompressedCorpusStore.build(strings, sample_bytes=2 << 20)
+pipe = TokenPipeline(store, BatchSpec(args.batch, args.seq, seed=0))
+print(f"corpus ratio {store.compression_ratio:.2f}x; vocab "
+      f"{store.tokenizer.vocab_size}")
+
+cfg = replace(get_arch("mamba2-780m"),
+              n_layers=args.layers, d_model=args.d_model,
+              ssm_state=64, ssm_head_dim=32,
+              vocab_size=store.tokenizer.vocab_size)
+print(f"model: {cfg.n_params() / 1e6:.1f}M params "
+      f"({cfg.n_layers}L d{cfg.d_model}, SSD)")
+
+params = build_params(cfg, seed=0)
+opt = AdamWConfig(lr=3e-3)
+state = {"params": params, "opt": init_state(params, opt),
+         "step": jnp.zeros((), jnp.int32)}
+step_fn = jax.jit(make_train_step(cfg, opt, schedule_total=args.steps))
+
+
+def batch_fn(step):
+    b = pipe.batch(step)
+    return {"tokens": jnp.asarray(b["tokens"]),
+            "targets": jnp.asarray(b["targets"])}
+
+
+loop = TrainLoop(step_fn, state, batch_fn,
+                 LoopConfig(total_steps=args.steps, ckpt_every=100,
+                            ckpt_dir=args.ckpt_dir, log_every=20),
+                 abstract_state=jax.eval_shape(lambda: state))
+stats = loop.run()
+first, last = stats.losses[0], stats.losses[-1]
+print(f"\nloss {first:.3f} -> {last:.3f} over {stats.steps_run} steps "
+      f"(resumed from {stats.resumed_from})")
+assert last < first, "loss should decrease on the compressed-corpus pipeline"
+print("OK: end-to-end training on the OnPair data plane works")

@@ -1,0 +1,36 @@
+"""The paper's primary contribution: OnPair / OnPair16 string compression
+with fast random access, plus the baselines it is evaluated against
+(BPE, FSST-like, block-based zstd/zlib, RAW).
+
+Layered as: packing (u64 tricks) -> lpm (two-tier longest prefix matching)
+-> onpair (training + parsing phases) -> packed (frozen dictionary artifact
++ static LPM arrays consumed by the JAX/Pallas kernels).
+"""
+
+from repro.core.api import (CompressedCorpus, RawCompressor, StringCompressor,
+                            TrainStats, pack_corpus)
+from repro.core.blockcomp import ZlibBlockCompressor, ZstdBlockCompressor
+from repro.core.bpe import BPECompressor
+from repro.core.fsst import FSSTCompressor
+from repro.core.onpair import (MAX_TOKENS, OnPairCompressor, OnPairConfig,
+                               auto_threshold, make_onpair, make_onpair16,
+                               train_dictionary)
+from repro.core.packed import PackedDictionary
+
+ALL_COMPRESSORS = {
+    "raw": RawCompressor,
+    "zlib-block": ZlibBlockCompressor,
+    "zstd-block": ZstdBlockCompressor,
+    "bpe": BPECompressor,
+    "fsst": FSSTCompressor,
+    "onpair": make_onpair,
+    "onpair16": make_onpair16,
+}
+
+__all__ = [
+    "CompressedCorpus", "RawCompressor", "StringCompressor", "TrainStats",
+    "pack_corpus", "ZlibBlockCompressor", "ZstdBlockCompressor",
+    "BPECompressor", "FSSTCompressor", "OnPairCompressor", "OnPairConfig",
+    "MAX_TOKENS", "auto_threshold", "make_onpair", "make_onpair16",
+    "train_dictionary", "PackedDictionary", "ALL_COMPRESSORS",
+]

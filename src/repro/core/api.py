@@ -1,0 +1,100 @@
+"""Common interface all field-level / block-level compressors implement.
+
+A *corpus* is a list of independent byte strings (paper: rows of a string
+column). Compressors turn it into a :class:`CompressedCorpus` — one payload
+blob plus per-string byte offsets — so the benchmark harness can measure the
+paper's four axes (ratio, compression speed, decompression speed, random
+access latency) uniformly across OnPair/OnPair16/BPE/FSST/LZ-block/RAW.
+"""
+
+from __future__ import annotations
+
+import abc
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class CompressedCorpus:
+    """Concatenated compressed strings + offsets (random-access layout)."""
+
+    payload: np.ndarray            # u8[total_compressed_bytes]
+    offsets: np.ndarray            # i64[n+1], byte offsets into payload
+    raw_bytes: int                 # original corpus size (payload only)
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def n_strings(self) -> int:
+        return len(self.offsets) - 1
+
+    @property
+    def compressed_bytes(self) -> int:
+        return int(self.payload.size)
+
+    @property
+    def ratio(self) -> float:
+        """Compression ratio (raw payload / compressed payload), as in the
+        paper's tables: both RAW and compressed layouts need an offset array,
+        so offsets cancel and dictionaries are reported separately (Table 4)."""
+        return self.raw_bytes / max(1, self.compressed_bytes)
+
+    def string_payload(self, i: int) -> bytes:
+        return self.payload[int(self.offsets[i]) : int(self.offsets[i + 1])].tobytes()
+
+
+@dataclass
+class TrainStats:
+    train_seconds: float = 0.0
+    sample_bytes: int = 0
+    dict_entries: int = 0
+    dict_data_bytes: int = 0
+    dict_total_bytes: int = 0
+
+
+class StringCompressor(abc.ABC):
+    """Train-once, compress/decompress-many string compressor."""
+
+    name: str = "base"
+
+    @abc.abstractmethod
+    def train(self, strings: list[bytes], dataset_bytes: int | None = None) -> TrainStats:
+        """Build the dictionary/model from (a sample of) the corpus."""
+
+    @abc.abstractmethod
+    def compress(self, strings: list[bytes]) -> CompressedCorpus:
+        """Compress every string independently (field-level) or in blocks."""
+
+    @abc.abstractmethod
+    def decompress_all(self, corpus: CompressedCorpus) -> bytes:
+        """Sequentially decode the full corpus; returns concatenated strings."""
+
+    @abc.abstractmethod
+    def access(self, corpus: CompressedCorpus, i: int) -> bytes:
+        """Random access: materialise string ``i`` alone."""
+
+
+def pack_corpus(parts: list[bytes], raw_bytes: int, **meta) -> CompressedCorpus:
+    offsets = np.zeros(len(parts) + 1, dtype=np.int64)
+    np.cumsum([len(p) for p in parts], out=offsets[1:])
+    payload = np.frombuffer(b"".join(parts), dtype=np.uint8).copy()
+    return CompressedCorpus(payload=payload, offsets=offsets,
+                            raw_bytes=raw_bytes, meta=dict(meta))
+
+
+class RawCompressor(StringCompressor):
+    """Uncompressed baseline (paper's RAW row)."""
+
+    name = "raw"
+
+    def train(self, strings, dataset_bytes=None) -> TrainStats:
+        return TrainStats()
+
+    def compress(self, strings):
+        return pack_corpus(strings, sum(len(s) for s in strings))
+
+    def decompress_all(self, corpus):
+        return corpus.payload.tobytes()
+
+    def access(self, corpus, i):
+        return corpus.string_payload(i)

@@ -1,0 +1,237 @@
+"""OnPair / OnPair16 — the paper's core contribution (§3).
+
+Training phase (§3.2): a *single sequential pass* over a shuffled random
+sample. The sample is tokenised with the current dictionary via longest
+prefix matching; adjacent token-pair frequencies are counted in a local hash
+map (NOT global statistics — this is the cache-friendly departure from BPE),
+and when a pair's count reaches the threshold the pair is merged into a new
+token. The new token immediately replaces the last parsed token so that
+subsequent pair counting continues with it (Figure 1), and it becomes
+matchable for the rest of the pass. Training halts when the dictionary
+reaches 65,536 tokens or the sample is exhausted.
+
+Parsing phase (§3.3): every string is independently greedily tokenised into
+2-byte token IDs — this per-string independence is what gives O(1) random
+access with no block overhead.
+
+OnPair16 (§3.2.2, §3.4.4): entries bounded to 16 bytes and long-pattern
+buckets bounded to 128 suffixes, enabling the fixed-size-copy decoder and the
+packed-u64 suffix comparisons.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.api import CompressedCorpus, StringCompressor, TrainStats, pack_corpus
+from repro.core.lpm import DynamicLPM
+from repro.core.packed import PackedDictionary
+
+MAX_TOKENS = 65536  # 2-byte token IDs (paper §3.1)
+
+
+@dataclass
+class OnPairConfig:
+    max_tokens: int = MAX_TOKENS
+    #: maximum dictionary entry length; None = unbounded (OnPair),
+    #: 16 = OnPair16 (§3.2.2).
+    max_entry_len: int | None = None
+    #: maximum suffixes per long-pattern bucket; None = unbounded (OnPair),
+    #: 128 = OnPair16 (§3.4.4).
+    max_bucket: int | None = None
+    #: pair-frequency threshold; None = auto max(2, floor(log2(S_MiB))) (§3.2.1).
+    threshold: int | None = None
+    #: training-sample budget in bytes; the paper trains on a small random
+    #: sample and stops early once the dictionary is full.
+    sample_bytes: int = 8 << 20
+    seed: int = 0
+
+    @staticmethod
+    def onpair(**kw) -> "OnPairConfig":
+        return OnPairConfig(**kw)
+
+    @staticmethod
+    def onpair16(**kw) -> "OnPairConfig":
+        kw.setdefault("max_entry_len", 16)
+        kw.setdefault("max_bucket", 128)
+        return OnPairConfig(**kw)
+
+
+def auto_threshold(dataset_bytes: int) -> int:
+    """threshold = max(2, floor(log2(S))) with S in MiB (§3.2.1)."""
+    mib = dataset_bytes / float(1 << 20)
+    if mib <= 1.0:
+        return 2
+    return max(2, int(math.floor(math.log2(mib))))
+
+
+@dataclass
+class TrainResult:
+    entries: list[bytes]
+    lpm: DynamicLPM
+    scanned_bytes: int
+    scanned_strings: int
+    threshold: int
+    merges_attempted: int
+    merges_accepted: int
+
+
+def train_dictionary(strings: list[bytes], cfg: OnPairConfig,
+                     dataset_bytes: int | None = None,
+                     sample_order: np.ndarray | None = None) -> TrainResult:
+    """Single-pass OnPair dictionary construction (§3.2, Figure 1)."""
+    if dataset_bytes is None:
+        dataset_bytes = sum(len(s) for s in strings)
+    threshold = cfg.threshold if cfg.threshold is not None else auto_threshold(dataset_bytes)
+
+    # Randomly selected, shuffled sample (§3.2): expose the trainer to global
+    # rather than local patterns, since construction halts when the dict fills.
+    if sample_order is None:
+        rng = np.random.default_rng(cfg.seed)
+        sample_order = rng.permutation(len(strings))
+
+    entries: list[bytes] = [bytes([b]) for b in range(256)]
+    entry_index: set[bytes] = set(entries)
+    lpm = DynamicLPM()
+    for tid, e in enumerate(entries):
+        lpm.insert(e, tid)
+
+    # Local pair-frequency map: (prev_token, cur_token) -> count.
+    # A count of -1 marks a pair as finalised (already merged, or rejected by
+    # the OnPair16 bounds) so it is never re-attempted.
+    counts: dict[tuple[int, int], int] = {}
+    max_entry = cfg.max_entry_len
+    max_bucket = cfg.max_bucket
+
+    scanned = 0
+    scanned_strings = 0
+    attempted = accepted = 0
+    full = len(entries) >= cfg.max_tokens
+    search = lpm.search
+
+    for idx in sample_order:
+        if full or scanned >= cfg.sample_bytes:
+            break
+        s = strings[int(idx)]
+        if not s:
+            continue
+        scanned += len(s)
+        scanned_strings += 1
+        prev = -1
+        pos = 0
+        n = len(s)
+        while pos < n:
+            tid, length = search(s, pos)
+            pos += length
+            if prev >= 0 and not full:
+                key = (prev, tid)
+                c = counts.get(key, 0)
+                if c >= 0:
+                    c += 1
+                    if c >= threshold:
+                        attempted += 1
+                        new_bytes = entries[prev] + entries[tid]
+                        ok = True
+                        if max_entry is not None and len(new_bytes) > max_entry:
+                            ok = False
+                        elif new_bytes in entry_index:
+                            ok = False
+                        elif (max_bucket is not None and len(new_bytes) > 8
+                              and lpm.bucket_size(new_bytes) >= max_bucket):
+                            ok = False
+                        if ok:
+                            new_tid = len(entries)
+                            entries.append(new_bytes)
+                            entry_index.add(new_bytes)
+                            lpm.insert(new_bytes, new_tid)
+                            accepted += 1
+                            # Figure 1: the last parsed token is replaced by
+                            # the merged token; pair counting continues with it.
+                            tid = new_tid
+                            if len(entries) >= cfg.max_tokens:
+                                full = True
+                        counts[key] = -1
+                    else:
+                        counts[key] = c
+            prev = tid
+
+    return TrainResult(entries=entries, lpm=lpm, scanned_bytes=scanned,
+                       scanned_strings=scanned_strings, threshold=threshold,
+                       merges_attempted=attempted, merges_accepted=accepted)
+
+
+class OnPairCompressor(StringCompressor):
+    """Field-level compressor API over the OnPair training/parsing phases."""
+
+    def __init__(self, cfg: OnPairConfig | None = None, variant16: bool = False):
+        if cfg is None:
+            cfg = OnPairConfig.onpair16() if variant16 else OnPairConfig.onpair()
+        self.cfg = cfg
+        self.name = "onpair16" if cfg.max_entry_len == 16 else "onpair"
+        self.dictionary: PackedDictionary | None = None
+        self._lpm: DynamicLPM | None = None
+        self.train_result: TrainResult | None = None
+
+    # ------------------------------------------------------------------ train
+    def train(self, strings: list[bytes], dataset_bytes: int | None = None) -> TrainStats:
+        t0 = time.perf_counter()
+        result = train_dictionary(strings, self.cfg, dataset_bytes=dataset_bytes)
+        self.train_result = result
+        self._lpm = result.lpm
+        self.dictionary = PackedDictionary.build(result.entries)
+        dt = time.perf_counter() - t0
+        return TrainStats(
+            train_seconds=dt,
+            sample_bytes=result.scanned_bytes,
+            dict_entries=len(result.entries),
+            dict_data_bytes=self.dictionary.data_bytes,
+            dict_total_bytes=self.dictionary.total_bytes,
+        )
+
+    # --------------------------------------------------------------- compress
+    def compress(self, strings: list[bytes]) -> CompressedCorpus:
+        assert self._lpm is not None, "train() first"
+        parse = self._lpm.parse
+        parts: list[bytes] = []
+        raw = 0
+        for s in strings:
+            raw += len(s)
+            ids = parse(s)
+            parts.append(np.asarray(ids, dtype="<u2").tobytes())
+        return pack_corpus(parts, raw, compressor=self.name)
+
+    def compress_string(self, s: bytes) -> bytes:
+        assert self._lpm is not None, "train() first"
+        return np.asarray(self._lpm.parse(s), dtype="<u2").tobytes()
+
+    # ------------------------------------------------------------- decompress
+    def decompress_all(self, corpus: CompressedCorpus) -> bytes:
+        """Full-corpus decode. Strings are independent token streams of u16
+        IDs, so the concatenated payload is itself one token stream — decoded
+        with the vectorised Algorithm 3 (PackedDictionary.decode_tokens)."""
+        assert self.dictionary is not None
+        tokens = corpus.payload.view("<u2")
+        return self.dictionary.decode_tokens(np.asarray(tokens))
+
+    def access(self, corpus: CompressedCorpus, i: int) -> bytes:
+        assert self.dictionary is not None
+        o0, o1 = int(corpus.offsets[i]), int(corpus.offsets[i + 1])
+        tokens = corpus.payload[o0:o1].view("<u2")
+        entries = self.dictionary.entries
+        return b"".join(entries[t] for t in tokens)
+
+
+def make_onpair(sample_bytes: int = 8 << 20, seed: int = 0,
+                threshold: int | None = None, max_tokens: int = MAX_TOKENS) -> OnPairCompressor:
+    return OnPairCompressor(OnPairConfig.onpair(
+        sample_bytes=sample_bytes, seed=seed, threshold=threshold, max_tokens=max_tokens))
+
+
+def make_onpair16(sample_bytes: int = 8 << 20, seed: int = 0,
+                  threshold: int | None = None, max_tokens: int = MAX_TOKENS) -> OnPairCompressor:
+    return OnPairCompressor(OnPairConfig.onpair16(
+        sample_bytes=sample_bytes, seed=seed, threshold=threshold, max_tokens=max_tokens))

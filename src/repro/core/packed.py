@@ -1,0 +1,268 @@
+"""Packed dictionary artifact + static LPM arrays (paper §3.4.3, §3.5, Fig. 5/7).
+
+After training, the dictionary is frozen into:
+
+* the decode layout of Figure 7 — a contiguous byte blob + a u32 offset
+  array (entry ``i`` is ``blob[offsets[i]:offsets[i+1]]``), plus the
+  OnPair16 fast-decode matrix: a ``(N, 16)`` u8 table so every token decodes
+  with one fixed-size row copy (Algorithm 3's unconditional 16-byte copy);
+
+* the static LPM layout of Figure 5, adapted for TPU (DESIGN.md §3): instead
+  of PtrHash + cache-line bucket-info records, both tiers become flat
+  parallel arrays with open-addressing hash tables, so lookups are plain
+  gathers and probing is a bounded loop. Packed u64 values are stored as
+  (lo, hi) u32 pairs because TPUs (and default JAX) have no native u64.
+
+All hashes are 32-bit multiplicative mixes computed identically here (numpy)
+and in the JAX kernels.
+"""
+
+from __future__ import annotations
+
+import io
+from dataclasses import dataclass
+
+import numpy as np
+
+_ARANGE16 = np.arange(16, dtype=np.int64)
+
+U32 = np.uint32
+_M32 = 0xFFFFFFFF
+
+
+def mix32(x: int) -> int:
+    """32-bit finaliser (murmur3-style); scalar version used at build time."""
+    x &= _M32
+    x = (x * 0x85EBCA6B) & _M32
+    x ^= x >> 13
+    x = (x * 0xC2B2AE35) & _M32
+    x ^= x >> 16
+    return x
+
+
+def hash_key(lo: int, hi: int, length: int) -> int:
+    """Hash of a packed (lo, hi, len) key; must match kernels/ref exactly."""
+    return mix32(lo ^ mix32(hi ^ mix32(length)))
+
+
+def split_u64(value: int) -> tuple[int, int]:
+    return value & _M32, (value >> 32) & _M32
+
+
+def _pack_lo_hi(entry: bytes) -> tuple[int, int]:
+    v = int.from_bytes(entry[:8], "little")
+    return split_u64(v)
+
+
+def _build_table(keys: list[tuple[int, int, int]], payloads: list[int],
+                 empty_payload: int) -> tuple[np.ndarray, np.ndarray, np.ndarray,
+                                              np.ndarray, int]:
+    """Open-addressing (linear probe) table over (lo, hi, len) keys.
+
+    Returns (tbl_lo, tbl_hi, tbl_len, tbl_payload, max_probes). Empty slots
+    have len == 0 (real entries always have len >= 1).
+    """
+    n = len(keys)
+    size = 16
+    while size < 2 * max(n, 1):
+        size *= 2
+    tbl_lo = np.zeros(size, dtype=U32)
+    tbl_hi = np.zeros(size, dtype=U32)
+    tbl_len = np.zeros(size, dtype=np.int32)
+    tbl_payload = np.full(size, empty_payload, dtype=np.int32)
+    mask = size - 1
+    max_probes = 1
+    for (lo, hi, length), payload in zip(keys, payloads):
+        slot = hash_key(lo, hi, length) & mask
+        probes = 1
+        while tbl_len[slot] != 0:
+            slot = (slot + 1) & mask
+            probes += 1
+        tbl_lo[slot] = lo
+        tbl_hi[slot] = hi
+        tbl_len[slot] = length
+        tbl_payload[slot] = payload
+        max_probes = max(max_probes, probes)
+    return tbl_lo, tbl_hi, tbl_len, tbl_payload, max_probes
+
+
+@dataclass
+class PackedDictionary:
+    """Frozen OnPair/OnPair16 dictionary with decode + static-LPM layouts."""
+
+    entries: list[bytes]
+    variant16: bool
+
+    # --- decode layout (Figure 7 + Algorithm 3) ---
+    blob: np.ndarray          # u8[total_data_bytes]
+    offsets: np.ndarray       # u32[n+1]
+    lens: np.ndarray          # i32[n]
+    mat16: np.ndarray         # u8[n, 16]  (first 16 bytes, zero padded)
+
+    # --- static LPM: short tier (<= 8 bytes) ---
+    s_lo: np.ndarray
+    s_hi: np.ndarray
+    s_len: np.ndarray         # 0 = empty slot
+    s_tok: np.ndarray
+    s_probe_max: int
+
+    # --- static LPM: long tier (> 8 bytes), bucketed by 8-byte prefix ---
+    p_lo: np.ndarray
+    p_hi: np.ndarray
+    p_len: np.ndarray         # 0 = empty, 8 = occupied (prefix keys are 8 B)
+    p_bucket: np.ndarray      # index into bucket arrays, -1 on empty slots
+    p_probe_max: int
+    bucket_start: np.ndarray  # i32[num_buckets]
+    bucket_size: np.ndarray   # i32[num_buckets]
+    max_bucket_size: int
+    suf_lo: np.ndarray        # u32[M]  first 8 suffix bytes, packed LE
+    suf_hi: np.ndarray
+    suf_len: np.ndarray       # i32[M]  full suffix length (may exceed 8 for OnPair)
+    suf_tok: np.ndarray       # i32[M]
+
+    # ------------------------------------------------------------------ build
+    @classmethod
+    def build(cls, entries: list[bytes]) -> "PackedDictionary":
+        n = len(entries)
+        lens = np.array([len(e) for e in entries], dtype=np.int32)
+        offsets = np.zeros(n + 1, dtype=np.uint32)
+        np.cumsum(lens, out=offsets[1:])
+        blob = np.frombuffer(b"".join(entries), dtype=np.uint8).copy()
+        mat16 = np.zeros((n, 16), dtype=np.uint8)
+        for i, e in enumerate(entries):
+            head = e[:16]
+            mat16[i, : len(head)] = np.frombuffer(head, dtype=np.uint8)
+        variant16 = bool((lens <= 16).all())
+
+        # short tier
+        short_keys, short_payloads = [], []
+        for tid, e in enumerate(entries):
+            if len(e) <= 8:
+                lo, hi = _pack_lo_hi(e)
+                short_keys.append((lo, hi, len(e)))
+                short_payloads.append(tid)
+        s_lo, s_hi, s_len, s_tok, s_probe_max = _build_table(
+            short_keys, short_payloads, empty_payload=-1)
+
+        # long tier: group by 8-byte prefix, suffixes sorted descending length
+        buckets: dict[tuple[int, int], list[tuple[bytes, int]]] = {}
+        for tid, e in enumerate(entries):
+            if len(e) > 8:
+                buckets.setdefault(_pack_lo_hi(e[:8]), []).append((e[8:], tid))
+        prefix_keys, bucket_ids = [], []
+        bucket_start_l, bucket_size_l = [], []
+        suf_lo_l, suf_hi_l, suf_len_l, suf_tok_l = [], [], [], []
+        for (lo, hi), items in buckets.items():
+            items.sort(key=lambda it: -len(it[0]))  # stable: ties keep id order
+            prefix_keys.append((lo, hi, 8))
+            bucket_ids.append(len(bucket_start_l))
+            bucket_start_l.append(len(suf_lo_l))
+            bucket_size_l.append(len(items))
+            for suffix, tid in items:
+                sl, sh = _pack_lo_hi(suffix)
+                suf_lo_l.append(sl)
+                suf_hi_l.append(sh)
+                suf_len_l.append(len(suffix))
+                suf_tok_l.append(tid)
+        p_lo, p_hi, p_len, p_bucket, p_probe_max = _build_table(
+            prefix_keys, bucket_ids, empty_payload=-1)
+
+        return cls(
+            entries=entries, variant16=variant16,
+            blob=blob, offsets=offsets, lens=lens, mat16=mat16,
+            s_lo=s_lo, s_hi=s_hi, s_len=s_len, s_tok=s_tok,
+            s_probe_max=s_probe_max,
+            p_lo=p_lo, p_hi=p_hi, p_len=p_len, p_bucket=p_bucket,
+            p_probe_max=p_probe_max,
+            bucket_start=np.array(bucket_start_l or [0], dtype=np.int32),
+            bucket_size=np.array(bucket_size_l or [0], dtype=np.int32),
+            max_bucket_size=int(max(bucket_size_l, default=0)),
+            suf_lo=np.array(suf_lo_l or [0], dtype=U32),
+            suf_hi=np.array(suf_hi_l or [0], dtype=U32),
+            suf_len=np.array(suf_len_l or [0], dtype=np.int32),
+            suf_tok=np.array(suf_tok_l or [0], dtype=np.int32),
+        )
+
+    # ------------------------------------------------------------- accounting
+    @property
+    def num_entries(self) -> int:
+        return len(self.entries)
+
+    @property
+    def data_bytes(self) -> int:
+        """Paper Table 4 'Data' column: raw bytes of all entries."""
+        return int(self.blob.size)
+
+    @property
+    def total_bytes(self) -> int:
+        """Paper Table 4 'Total': data region + 4-byte offset array."""
+        return self.data_bytes + 4 * (len(self.offsets))
+
+    # ----------------------------------------------------------------- decode
+    def decode_tokens(self, tokens: np.ndarray) -> bytes:
+        """Vectorised Algorithm 3 over a full token stream.
+
+        Fast path: every token writes its (zero-padded) first 16 bytes via a
+        masked scatter (the numpy analogue of the unconditional 16-byte SIMD
+        copy). Slow path: the rare >16-byte entries (unbounded OnPair only)
+        append their tails.
+        """
+        tokens = np.asarray(tokens, dtype=np.int64)
+        if tokens.size == 0:
+            return b""
+        lens = self.lens[tokens].astype(np.int64)
+        ends = np.cumsum(lens)
+        starts = ends - lens
+        total = int(ends[-1])
+        out = np.zeros(total + 16, dtype=np.uint8)  # +16: fast-path overhang
+        rows = self.mat16[tokens]                   # (T, 16)
+        clamped = np.minimum(lens, 16)
+        # Scatter grouped by token length: one exact vectorised write per
+        # distinct length (<= 16 passes), total work ~ output bytes.
+        for length in np.unique(clamped):
+            L = int(length)
+            sel = np.nonzero(clamped == L)[0]
+            idx = starts[sel, None] + _ARANGE16[None, :L]
+            out[idx.reshape(-1)] = rows[sel, :L].reshape(-1)
+        if not self.variant16:
+            long_pos = np.nonzero(lens > 16)[0]
+            for t in long_pos:
+                tid = tokens[t]
+                o = int(self.offsets[tid])
+                tail = self.blob[o + 16 : o + int(self.lens[tid])]
+                s = int(starts[t]) + 16
+                out[s : s + tail.size] = tail
+        return out[:total].tobytes()
+
+    def decode_string(self, compressed: bytes) -> bytes:
+        """Random-access decode of one independently-compressed string."""
+        tokens = np.frombuffer(compressed, dtype="<u2")
+        parts = self.entries
+        return b"".join(parts[t] for t in tokens)
+
+    # -------------------------------------------------------------- serialise
+    def save(self, path: str) -> None:
+        np.savez_compressed(path, blob=self.blob, offsets=self.offsets)
+
+    @classmethod
+    def load(cls, path: str) -> "PackedDictionary":
+        with np.load(path) as z:
+            blob, offsets = z["blob"], z["offsets"]
+        raw = blob.tobytes()
+        entries = [raw[int(offsets[i]) : int(offsets[i + 1])]
+                   for i in range(len(offsets) - 1)]
+        return cls.build(entries)
+
+    def to_bytes(self) -> bytes:
+        buf = io.BytesIO()
+        np.savez_compressed(buf, blob=self.blob, offsets=self.offsets)
+        return buf.getvalue()
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "PackedDictionary":
+        with np.load(io.BytesIO(data)) as z:
+            blob, offsets = z["blob"], z["offsets"]
+        raw = blob.tobytes()
+        entries = [raw[int(offsets[i]) : int(offsets[i + 1])]
+                   for i in range(len(offsets) - 1)]
+        return cls.build(entries)

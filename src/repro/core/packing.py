@@ -1,0 +1,75 @@
+"""Byte <-> u64 packing utilities shared by the LPM implementations.
+
+The paper packs up to 8 bytes little-endian into a 64-bit integer so that
+prefix comparison reduces to ``count_trailing_zeros(a ^ b) / 8`` (Algorithm 2).
+Strings shorter than 8 bytes are zero-padded at the most-significant end, so
+the *low-order* bytes always hold the actual prefix.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+MASK64 = (1 << 64) - 1
+
+
+def pack_u64(data: bytes, start: int = 0, length: int | None = None) -> int:
+    """Pack ``data[start:start+length]`` (length <= 8) little-endian into an int."""
+    if length is None:
+        length = min(8, len(data) - start)
+    chunk = data[start : start + length]
+    return int.from_bytes(chunk, "little")
+
+
+def unpack_u64(value: int, length: int) -> bytes:
+    """Inverse of :func:`pack_u64`."""
+    return value.to_bytes(8, "little")[:length]
+
+
+def ctz64(x: int) -> int:
+    """Count trailing zeros of a non-zero 64-bit value (64 for x == 0)."""
+    if x == 0:
+        return 64
+    return ((x & -x).bit_length()) - 1
+
+
+def shared_prefix_size(s1: int, s2: int) -> int:
+    """Algorithm 2: number of matching low-order *bytes* of two packed u64s."""
+    diff = (s1 ^ s2) & MASK64
+    return ctz64(diff) // 8
+
+
+def is_prefix_packed(input_val: int, input_len: int, prefix_val: int, prefix_len: int) -> bool:
+    """Algorithm 2 ``IsPrefix`` on packed u64 values.
+
+    Zero-padding at the most significant end means ``shared_prefix_size`` can
+    over-report when both values run out of real bytes; the ``prefix_len``
+    bound (line 6 of Algorithm 2) rules out artificial padding matches.
+    """
+    if prefix_len > input_len:
+        return False
+    return shared_prefix_size(input_val, prefix_val) >= prefix_len
+
+
+def pack_rows_u64(entries: list[bytes]) -> np.ndarray:
+    """Vectorised little-endian packing of many <=8-byte strings."""
+    out = np.zeros(len(entries), dtype=np.uint64)
+    for i, e in enumerate(entries):
+        out[i] = np.uint64(int.from_bytes(e[:8], "little"))
+    return out
+
+
+# A multiplicative hash over (packed value, length); the constant is the
+# 64-bit golden-ratio multiplier (used instead of PtrHash: see DESIGN.md §3 —
+# perfect hashing is replaced by bounded open-addressing probes over flat
+# arrays, the TPU/VMEM-friendly analogue).
+_GOLDEN = 0x9E3779B97F4A7C15
+
+
+def hash_u64(value: int, salt: int = 0) -> int:
+    x = (value + salt) & MASK64
+    x = (x * _GOLDEN) & MASK64
+    x ^= x >> 29
+    x = (x * 0xBF58476D1CE4E5B9) & MASK64
+    x ^= x >> 32
+    return x

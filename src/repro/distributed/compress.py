@@ -1,0 +1,99 @@
+"""Gradient compression for cross-pod all-reduce (distributed trick #2).
+
+int8-on-the-wire mean-all-reduce with a shared scale and error feedback:
+
+  1. pmax(|g|) over the axis -> one shared f32 scale per tensor (scalar
+     collective, negligible bytes);
+  2. local int8 quantisation (+ carry-in of last step's residual);
+  3. **all_to_all of int8 chunks** — each member receives every peer's int8
+     chunk for its slice (this is the reduce-scatter phase, 1 B/element on
+     the wire), sums locally in int32 (no overflow: N <= 2^23 peers), and
+     re-quantises the partial sum to int8 with a second shared scale;
+  4. **all_gather of the int8 partial sums** (1 B/element) and dequantise.
+
+Wire bytes ~= 2 B/element vs 8 B/element for a ring f32 all-reduce (4x) —
+measured in benchmarks/grad_compress_bench.py from the compiled HLO. A naive
+psum(int8.astype(int32)) would put 4 B/element back on the wire, which is
+why the reduce-scatter/all-gather split is explicit. The local quantisation
+residual is returned as the error-feedback buffer for the next step
+(Karimireddy et al.-style EF).
+
+Exposed as a shard_map'd collective so it can replace the cross-pod ('pod'
+axis) hop of gradient synchronisation — the DCN link is the slow one at
+multi-pod scale — while in-pod reduction stays native bf16/f32.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def _quantize(g: jnp.ndarray, axis: str):
+    scale = jax.lax.pmax(jnp.max(jnp.abs(g)), axis) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _compressed_psum_leaf(g: jnp.ndarray, ef: jnp.ndarray, axis: str,
+                          n_devices: int):
+    """int8-wire mean over `axis` for one tensor; returns (mean, new_ef)."""
+    shape = g.shape
+    g = g.astype(jnp.float32) + ef
+    q, scale = _quantize(g, axis)
+    new_ef = g - q.astype(jnp.float32) * scale          # error feedback
+
+    flat = q.reshape(-1)
+    pad = (-flat.shape[0]) % n_devices
+    flat = jnp.pad(flat, (0, pad))
+    chunks = flat.reshape(n_devices, -1)                # (N, m) int8
+    # reduce-scatter phase: int8 on the wire
+    recv = jax.lax.all_to_all(chunks, axis, split_axis=0, concat_axis=0,
+                              tiled=False)
+    recv = recv.reshape(n_devices, -1)                  # peers' chunks for me
+    part = jnp.sum(recv.astype(jnp.int32), axis=0)      # local int32 sum
+    # re-quantise the partial sum so the gather phase is int8 too
+    psum_f = part.astype(jnp.float32) * scale
+    scale2 = jax.lax.pmax(jnp.max(jnp.abs(psum_f)), axis) / 127.0
+    scale2 = jnp.maximum(scale2, 1e-12)
+    q2 = jnp.clip(jnp.round(psum_f / scale2), -127, 127).astype(jnp.int8)
+    # all-gather phase: int8 on the wire
+    gathered = jax.lax.all_gather(q2, axis, tiled=True)  # (N*m,) int8
+    total = gathered.astype(jnp.float32) * scale2
+    n = jnp.float32(n_devices)
+    mean = (total[: g.size] / n).reshape(shape)
+    return mean, new_ef
+
+
+def compressed_pmean(tree, ef_tree, mesh, axis: str = "pod"):
+    """Error-feedback int8-wire mean-all-reduce of a pytree over ``axis``.
+
+    Inputs are replicated over the other mesh axes; returns (mean_tree,
+    new_error_feedback_tree). Call under `use_mesh(mesh)`.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    n = int(mesh.shape[axis])
+    specs = jax.tree.map(lambda x: P(*([None] * x.ndim)), tree)
+    ef_specs = jax.tree.map(lambda x: P(*([None] * x.ndim)), ef_tree)
+
+    @partial(shard_map, mesh=mesh,
+             in_specs=(specs, ef_specs), out_specs=(specs, ef_specs),
+             check_rep=False)
+    def run(t, e):
+        flat_t, tdef = jax.tree_util.tree_flatten(t)
+        flat_e = tdef.flatten_up_to(e)
+        out = [_compressed_psum_leaf(g, ef, axis, n)
+               for g, ef in zip(flat_t, flat_e)]
+        return (tdef.unflatten([o[0] for o in out]),
+                tdef.unflatten([o[1] for o in out]))
+
+    return run(tree, ef_tree)
+
+
+def init_error_feedback(tree):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)

@@ -1,0 +1,218 @@
+"""Sharding rules: param/batch/cache PartitionSpecs per (arch x shape x mesh).
+
+Axes (per the production mesh spec):
+  pod   — cross-pod data parallelism (multi-pod mesh only)
+  data  — in-pod data parallelism; doubles as the FSDP/ZeRO shard axis
+  model — tensor/expert parallelism
+
+Rules are name-driven over the param tree (wq/wk/wv column-parallel, wo/w_down
+row-parallel, experts over 'model' when divisible (EP) else per-expert TP,
+SSM head-parallel, vocab-parallel embeddings when divisible). FSDP extends
+large leaves with 'data' on the first free divisible dim; optimizer moments
+always get the ZeRO-1 extension. Scan-stacked leaves carry a leading
+``n_blocks`` dim that is never sharded (it is the scan axis).
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as _layers
+from repro.models.config import ArchConfig, ShapeConfig
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    """Enter mesh context + enable model-code sharding constraints."""
+    _layers.set_mesh_context(mesh)
+    try:
+        with jax.sharding.set_mesh(mesh):
+            yield mesh
+    finally:
+        _layers.set_mesh_context(None)
+
+
+def axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def dp_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def dp_size(mesh: Mesh) -> int:
+    return int(np.prod([axis_size(mesh, a) for a in ("pod", "data")]))
+
+
+# ------------------------------------------------------------- param rules
+def _leaf_rule(path: str, shape: tuple[int, ...], mesh: Mesh,
+               cfg: ArchConfig) -> P:
+    """Base TP rule for one leaf (ignoring the stacked-blocks leading dim)."""
+    m = axis_size(mesh, "model")
+
+    def div(i):  # dim i divisible by model axis?
+        return shape[i] % m == 0
+
+    name = path.split("/")[-1]
+    if "ffn" in path and len(shape) == 3:                 # MoE experts (E,.,.)
+        E = shape[0]
+        if E % m == 0:
+            return P("model", None, None)                 # expert parallel
+        if name in ("w_gate", "w_up") and div(2):
+            return P(None, None, "model")                 # per-expert TP
+        if name == "w_down" and div(1):
+            return P(None, "model", None)
+        return P(None, None, None)
+    if name == "router":
+        return P(None, None)
+    if name in ("wq", "wk", "wv") and div(1):
+        return P(None, "model")                           # column parallel
+    if name == "wo" and div(0):
+        return P("model", None)                           # row parallel
+    if name in ("bq", "bk", "bv") and div(0):
+        return P("model")
+    if name in ("w_gate", "w_up") and div(1):
+        return P(None, "model")
+    if name == "w_down" and div(0):
+        return P("model", None)
+    # --- SSM (head-parallel) ---
+    if name in ("w_z", "w_x") and div(1):
+        return P(None, "model")
+    if name == "w_dt" and div(1):
+        return P(None, "model")
+    if name == "w_BC":
+        return P(None, None)
+    if name in ("conv_x",) and div(1):
+        return P(None, "model")
+    if name in ("conv_bx", "norm") and len(shape) == 1 and div(0) and "ssm" in path:
+        return P("model")
+    if name in ("A_log", "D", "dt_bias") and div(0):
+        return P("model")
+    if name == "w_out" and div(0):
+        return P("model", None)
+    # --- embeddings / head ---
+    if name == "embed":
+        if shape[0] % m == 0:
+            return P("model", None)                       # vocab parallel
+        if shape[1] % m == 0:
+            return P(None, "model")
+        return P(None, None)
+    if name == "lm_head":
+        if shape[1] % m == 0:
+            return P(None, "model")
+        return P(None, None)
+    return P(*([None] * len(shape)))
+
+
+def _extend_fsdp(spec: P, shape: tuple[int, ...], mesh: Mesh,
+                 axis: str = "data", min_size: int = 1 << 20) -> P:
+    """Add the FSDP/ZeRO axis on the first free dim divisible by its size."""
+    d = axis_size(mesh, axis)
+    if d <= 1 or int(np.prod(shape)) < min_size:
+        return spec
+    flat = [a for p in spec for a in (p if isinstance(p, tuple) else (p,))]
+    if axis in flat:
+        return spec  # already sharded on this axis (e.g. params under FSDP)
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (dim, cur) in enumerate(zip(shape, parts)):
+        if cur is None and dim % d == 0 and dim >= d:
+            parts[i] = axis
+            return P(*parts)
+    return spec
+
+
+def param_specs_tree(abstract_params, mesh: Mesh, cfg: ArchConfig,
+                     fsdp: bool = False):
+    """PartitionSpec pytree matching the (possibly scan-stacked) param tree."""
+
+    def rule(path, leaf):
+        keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        spath = "/".join(str(k) for k in keys)
+        shape = leaf.shape
+        stacked = "blocks" in spath and len(shape) >= 1
+        inner_shape = shape[1:] if stacked else shape
+        spec = _leaf_rule(spath, inner_shape, mesh, cfg)
+        if fsdp:
+            spec = _extend_fsdp(spec, inner_shape, mesh)
+        if stacked:
+            spec = P(None, *spec)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(rule, abstract_params)
+
+
+def param_shardings(abstract_params, mesh: Mesh, cfg: ArchConfig,
+                    fsdp: bool = False):
+    specs = param_specs_tree(abstract_params, mesh, cfg, fsdp)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ------------------------------------------------------------- batch rules
+def batch_specs(input_tree, mesh: Mesh):
+    """Shard the leading (global batch) dim over (pod, data) when divisible
+    (long_500k has batch 1: replicated input, sequence-parallel caches)."""
+    dp = dp_axes(mesh)
+    dpn = dp_size(mesh)
+
+    def rule(leaf):
+        lead = dp if dp and leaf.shape and leaf.shape[0] % dpn == 0 else None
+        spec = [lead] + [None] * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(rule, input_tree)
+
+
+# ------------------------------------------------------------- cache rules
+def cache_specs_tree(abstract_cache, mesh: Mesh, cfg: ArchConfig,
+                     shape: ShapeConfig):
+    """Decode-cache shardings.
+
+    KV caches (n_blocks, B, S, K, hd): batch over (pod,data); head_dim over
+    'model' (every assigned hd is divisible by 16). long_500k (batch=1) flips
+    to sequence parallelism: S over 'data' for full-attention caches. SSM
+    states shard heads over 'model', batch over (pod,data).
+    """
+    dp = dp_axes(mesh)
+    m = axis_size(mesh, "model")
+    d = axis_size(mesh, "data")
+    B = shape.global_batch
+    seq_parallel = B < dp_size(mesh)
+
+    def rule(path, leaf):
+        keys = "/".join(str(getattr(p, "key", "")) for p in path)
+        s = leaf.shape
+        if keys.endswith("pos"):
+            return NamedSharding(mesh, P())
+        if "state" in keys and len(s) == 5:      # (nb, B, H, P, N)
+            hspec = "model" if s[2] % m == 0 else None
+            bspec = dp if not seq_parallel and B % dp_size(mesh) == 0 else None
+            return NamedSharding(mesh, P(None, bspec, hspec, None, None))
+        if "conv" in keys and len(s) == 4:       # (nb, B, W-1, C)
+            cspec = "model" if s[3] % m == 0 else None
+            bspec = dp if not seq_parallel and B % dp_size(mesh) == 0 else None
+            return NamedSharding(mesh, P(None, bspec, None, cspec))
+        if len(s) == 5:                           # (nb, B, S, K, hd) KV
+            # head_dim over 'model' (divisible for every assigned arch);
+            # decode_attention constrains its per-step q/k/v to the same
+            # layout so the cache is never resharded (§Perf decode
+            # follow-up). long_500k (batch 1) adds sequence-parallel S/data.
+            hd_spec = "model" if s[4] % m == 0 else None
+            sspec = ("data" if seq_parallel and s[2] % d == 0 and s[2] >= 4 * d
+                     else None)
+            bspec = (dp if not seq_parallel and B % dp_size(mesh) == 0
+                     else None)
+            return NamedSharding(mesh, P(None, bspec, sspec, None, hd_spec))
+        return NamedSharding(mesh, P(*([None] * len(s))))
+
+    return jax.tree_util.tree_map_with_path(rule, abstract_cache)
+
+
+# ------------------------------------------------------------ outputs
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for the paper's compute hot-spots: OnPair16 parsing
+(longest prefix matching) and decompression — with ops.py jit wrappers and
+ref.py pure-jnp oracles. Validated in interpret mode on CPU."""

@@ -1,0 +1,142 @@
+"""Pallas TPU kernels for OnPair16 decompression (paper §3.5, Algorithm 3).
+
+TPU adaptation (DESIGN.md §3): the whole OnPair16 dictionary — (65536, 16)
+byte matrix + length table, ~4.25 MiB as int32 — fits in VMEM (16 MiB/core),
+so decode is a *VMEM-resident gather*. Two kernels:
+
+* ``decode_gather``  — throughput variant: grid over token tiles; each tile
+  gathers its fixed 16-byte rows + lengths. The ragged compaction (exclusive
+  prefix-sum + masked scatter) happens outside in jnp, mirroring the paper's
+  two-stage "copy 16 unconditionally, fix up after" split.
+* ``decode_compact`` — latency variant (random access): grid over strings;
+  a sequential loop performs Algorithm 3 verbatim — unconditional fixed-size
+  16-byte store at the output cursor, advance by the token's true length.
+
+Both are validated in interpret mode against repro.kernels.ref oracles and
+the Python reference decoder (tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU container: interpret mode executes the kernel body.
+
+
+# ------------------------------------------------------------- gather kernel
+def _gather_kernel(tok_ref, mat_ref, lent_ref, rows_ref, lens_ref):
+    toks = tok_ref[...]                    # (TB,)  token ids in this tile
+    mat = mat_ref[...]                     # (N, 16) VMEM-resident dictionary
+    lent = lent_ref[...]                   # (N,)
+    rows_ref[...] = jnp.take(mat, toks, axis=0)
+    lens_ref[...] = jnp.take(lent, toks, axis=0)
+
+
+@partial(jax.jit, static_argnames=("tile",))
+def decode_gather(tokens: jnp.ndarray, mat16: jnp.ndarray, lens: jnp.ndarray,
+                  tile: int = 1024):
+    """Phase-1 decode: tokens int32[T] -> (rows int32[T,16], lens int32[T]).
+
+    T must be a multiple of ``tile`` (pad tokens with 0; the padding rows are
+    masked out by the caller's prefix-sum phase).
+    """
+    T = tokens.shape[0]
+    assert T % tile == 0, "pad the token stream to a tile multiple"
+    N = mat16.shape[0]
+    grid = (T // tile,)
+    return pl.pallas_call(
+        _gather_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((N, 16), lambda i: (0, 0)),
+            pl.BlockSpec((N,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile, 16), lambda i: (i, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, 16), jnp.int32),
+            jax.ShapeDtypeStruct((T,), jnp.int32),
+        ],
+        interpret=INTERPRET,
+    )(tokens, mat16, lens)
+
+
+@partial(jax.jit, static_argnames=("max_out", "tile"))
+def decode_tokens_pallas(tokens: jnp.ndarray, n_tokens: jnp.ndarray,
+                         mat16: jnp.ndarray, lens: jnp.ndarray,
+                         max_out: int, tile: int = 1024):
+    """Full two-phase decode of one padded token stream.
+
+    Phase 1 = Pallas gather kernel; phase 2 = prefix-sum + masked scatter
+    (pure jnp — XLA fuses it; on TPU this is the vector-unit-friendly
+    replacement for sequential output appends).
+    """
+    T = tokens.shape[0]
+    rows, tl = decode_gather(tokens, mat16, lens, tile=tile)
+    valid = jnp.arange(T, dtype=jnp.int32) < n_tokens
+    tl = jnp.where(valid, tl, 0)
+    ends = jnp.cumsum(tl)
+    starts = ends - tl
+    out_len = ends[-1] if T > 0 else jnp.int32(0)
+    j = jnp.arange(16, dtype=jnp.int32)
+    idx = starts[:, None] + j[None, :]
+    mask = (j[None, :] < tl[:, None]) & valid[:, None]
+    idx_safe = jnp.where(mask, idx, max_out)
+    out = jnp.zeros(max_out + 1, dtype=jnp.int32)
+    out = out.at[idx_safe.reshape(-1)].set(rows.reshape(-1), mode="drop")
+    return out[:max_out], out_len
+
+
+# ------------------------------------------------------------ compact kernel
+def _compact_kernel(tok_ref, n_ref, mat_ref, lent_ref, out_ref, olen_ref):
+    """Algorithm 3 per string: fixed 16-byte store, advance by true length."""
+    out_ref[...] = jnp.zeros_like(out_ref)
+    n = n_ref[0]
+
+    def body(state):
+        t, pos = state
+        tok = tok_ref[0, t]
+        row = mat_ref[tok, pl.dslice(0, 16)]                  # one dict row
+        out_ref[0, pl.dslice(pos, 16)] = row                  # SIMD-style copy
+        return t + 1, pos + lent_ref[tok]
+
+    _, total = jax.lax.while_loop(lambda s: s[0] < n, body,
+                                  (jnp.int32(0), jnp.int32(0)))
+    olen_ref[0] = total
+
+
+@partial(jax.jit, static_argnames=("max_out",))
+def decode_compact(tokens: jnp.ndarray, n_tokens: jnp.ndarray,
+                   mat16: jnp.ndarray, lens: jnp.ndarray, max_out: int):
+    """Per-string sequential decode: tokens int32[B,T] -> (out int32[B,max_out+16],
+    out_len int32[B]). Grid = strings (each string decodes independently —
+    the paper's random-access property is the parallelism axis)."""
+    B, T = tokens.shape
+    N = mat16.shape[0]
+    out, olen = pl.pallas_call(
+        _compact_kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, T), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((N, 16), lambda i: (0, 0)),
+            pl.BlockSpec((N,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, max_out + 16), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, max_out + 16), jnp.int32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+        ],
+        interpret=INTERPRET,
+    )(tokens, n_tokens, mat16, lens)
+    return out[:, :max_out], olen

@@ -1,0 +1,109 @@
+"""Pallas TPU kernel for OnPair16 parsing/compression (paper §3.3-3.4).
+
+The static LPM structures (short-pattern hash table, prefix table, suffix
+buckets — repro.core.packed) total well under VMEM capacity, so the whole
+matcher state is VMEM-resident: the kernel loads every table once and runs
+the greedy longest-prefix-match loop per string. Strings are independent
+(the paper's random-access property), so the grid is the batch dimension.
+
+The in-kernel search is literally repro.kernels.ref._lpm_search_ref — the
+oracle and the kernel share one implementation of Algorithm 1/2, so the only
+thing the kernel adds is the VMEM staging + grid decomposition.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import DeviceDict, _lpm_search_ref
+
+INTERPRET = True  # CPU container: interpret mode executes the kernel body.
+
+
+def _encode_kernel(s_probe_max, p_probe_max, max_bucket,
+                   data_ref, len_ref,
+                   s_lo_ref, s_hi_ref, s_len_ref, s_tok_ref,
+                   p_lo_ref, p_hi_ref, p_len_ref, p_bucket_ref,
+                   bstart_ref, bsize_ref,
+                   suf_lo_ref, suf_hi_ref, suf_len_ref, suf_tok_ref,
+                   toks_ref, ntok_ref):
+    toks_ref[...] = jnp.zeros_like(toks_ref)
+    # Stage the full matcher state out of the refs (VMEM residency).
+    dd = DeviceDict(
+        mat16=jnp.zeros((1, 16), jnp.int32), lens=jnp.zeros((1,), jnp.int32),
+        s_lo=s_lo_ref[...], s_hi=s_hi_ref[...],
+        s_len=s_len_ref[...], s_tok=s_tok_ref[...],
+        p_lo=p_lo_ref[...], p_hi=p_hi_ref[...],
+        p_len=p_len_ref[...], p_bucket=p_bucket_ref[...],
+        bucket_start=bstart_ref[...], bucket_size=bsize_ref[...],
+        suf_lo=suf_lo_ref[...], suf_hi=suf_hi_ref[...],
+        suf_len=suf_len_ref[...], suf_tok=suf_tok_ref[...],
+        s_probe_max=s_probe_max, p_probe_max=p_probe_max,
+        max_bucket=max_bucket,
+    )
+    data_row = data_ref[0, :]
+    str_len = len_ref[0]
+    max_tokens = toks_ref.shape[1]
+
+    def cond(state):
+        pos, count = state
+        return (pos < str_len) & (count < max_tokens)
+
+    def body(state):
+        pos, count = state
+        tok, mlen = _lpm_search_ref(data_row, pos, str_len, dd)
+        toks_ref[0, pl.dslice(count, 1)] = tok[None]
+        return pos + mlen, count + 1
+
+    _, n = jax.lax.while_loop(cond, body, (jnp.int32(0), jnp.int32(0)))
+    ntok_ref[0] = n
+
+
+@partial(jax.jit, static_argnames=("max_tokens",))
+def encode_batch_pallas(data: jnp.ndarray, str_lens: jnp.ndarray,
+                        dd: DeviceDict, max_tokens: int):
+    """Compress a padded batch: data int32[B, L+16] (zero-padded byte values).
+
+    Returns (tokens int32[B, max_tokens], n_tokens int32[B]).
+    """
+    B, Lp = data.shape
+    S = dd.s_lo.shape[0]
+    P = dd.p_lo.shape[0]
+    NB = dd.bucket_start.shape[0]
+    M = dd.suf_lo.shape[0]
+
+    def full(shape):
+        rank = len(shape)
+        return pl.BlockSpec(shape, lambda i, _r=rank: (0,) * _r)
+
+    kernel = partial(_encode_kernel, dd.s_probe_max, dd.p_probe_max,
+                     dd.max_bucket)
+    return pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, Lp), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            full((S,)), full((S,)), full((S,)), full((S,)),
+            full((P,)), full((P,)), full((P,)), full((P,)),
+            full((NB,)), full((NB,)),
+            full((M,)), full((M,)), full((M,)), full((M,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, max_tokens), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, max_tokens), jnp.int32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+        ],
+        interpret=INTERPRET,
+    )(data, str_lens,
+      dd.s_lo, dd.s_hi, dd.s_len, dd.s_tok,
+      dd.p_lo, dd.p_hi, dd.p_len, dd.p_bucket,
+      dd.bucket_start, dd.bucket_size,
+      dd.suf_lo, dd.suf_hi, dd.suf_len, dd.suf_tok)

@@ -1,0 +1,109 @@
+"""Public jit'd entry points over the OnPair kernels.
+
+Bridges host-side types (PackedDictionary, list[bytes]) to the padded device
+layouts the kernels consume. Used by the serving path (on-device
+detokenisation) and by the benchmark harness; tests validate every path
+against repro.kernels.ref and the Python reference implementations.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.packed import PackedDictionary
+from repro.kernels import onpair_decode, onpair_encode
+from repro.kernels.ref import (DeviceDict, decode_batch_ref_jit,
+                               encode_batch_ref_jit)
+
+
+def _pad_to(x: int, multiple: int) -> int:
+    return ((x + multiple - 1) // multiple) * multiple
+
+
+def pack_strings(strings: list[bytes], pad_len: int | None = None,
+                 pad_extra: int = 16) -> tuple[np.ndarray, np.ndarray]:
+    """list[bytes] -> (data int32[B, L+pad_extra], lens int32[B])."""
+    L = pad_len if pad_len is not None else max((len(s) for s in strings), default=1)
+    data = np.zeros((len(strings), L + pad_extra), dtype=np.int32)
+    lens = np.zeros(len(strings), dtype=np.int32)
+    for i, s in enumerate(strings):
+        b = np.frombuffer(s, dtype=np.uint8)
+        data[i, : len(b)] = b
+        lens[i] = len(b)
+    return data, lens
+
+
+class OnPairDevice:
+    """Device-side OnPair16 codec over a trained PackedDictionary."""
+
+    def __init__(self, dictionary: PackedDictionary):
+        if not dictionary.variant16:
+            raise ValueError("device kernels target OnPair16 (<=16B entries); "
+                             "unbounded OnPair stays on the host path")
+        self.dictionary = dictionary
+        self.dd = DeviceDict.build(dictionary)
+
+    # ----------------------------------------------------------- encode
+    def encode_batch(self, strings: list[bytes], use_pallas: bool = True,
+                     max_tokens: int | None = None):
+        """Compress a batch; returns (tokens int32[B,T], n_tokens int32[B])."""
+        data, lens = pack_strings(strings)
+        if max_tokens is None:
+            max_tokens = data.shape[1] - 16 or 1
+        fn = (onpair_encode.encode_batch_pallas if use_pallas
+              else encode_batch_ref_jit)
+        toks, n = fn(jnp.asarray(data), jnp.asarray(lens), self.dd, max_tokens)
+        return np.asarray(toks), np.asarray(n)
+
+    def encode_to_bytes(self, strings: list[bytes], use_pallas: bool = True) -> list[bytes]:
+        toks, n = self.encode_batch(strings, use_pallas=use_pallas)
+        return [toks[i, : n[i]].astype("<u2").tobytes() for i in range(len(strings))]
+
+    # ----------------------------------------------------------- decode
+    def decode_stream(self, tokens: np.ndarray, use_pallas: bool = True,
+                      tile: int = 1024) -> bytes:
+        """Decode one token stream (any concatenation of compressed strings)."""
+        tokens = np.asarray(tokens, dtype=np.int32)
+        n = tokens.size
+        max_out = int(self.dictionary.lens[tokens].sum()) if n else 0
+        if n == 0:
+            return b""
+        T = _pad_to(n, tile)
+        padded = np.zeros(T, dtype=np.int32)
+        padded[:n] = tokens
+        if use_pallas:
+            out, out_len = onpair_decode.decode_tokens_pallas(
+                jnp.asarray(padded), jnp.int32(n), self.dd.mat16, self.dd.lens,
+                max_out, tile=tile)
+        else:
+            from repro.kernels.ref import decode_ref
+            import jax
+            out, out_len = jax.jit(decode_ref, static_argnames=("max_out",))(
+                jnp.asarray(padded), jnp.int32(n), self.dd.mat16, self.dd.lens,
+                max_out=max_out)
+        out = np.asarray(out[: int(out_len)])
+        return out.astype(np.uint8).tobytes()
+
+    def decode_batch(self, tokens: np.ndarray, n_tokens: np.ndarray,
+                     max_out: int, use_pallas: bool = True):
+        """Batched random-access decode: tokens int32[B,T] -> list[bytes]."""
+        tokens = np.asarray(tokens, dtype=np.int32)
+        n_tokens = np.asarray(n_tokens, dtype=np.int32)
+        if use_pallas:
+            out, olen = onpair_decode.decode_compact(
+                jnp.asarray(tokens), jnp.asarray(n_tokens),
+                self.dd.mat16, self.dd.lens, max_out)
+        else:
+            out, olen = decode_batch_ref_jit(
+                jnp.asarray(tokens), jnp.asarray(n_tokens),
+                self.dd.mat16, self.dd.lens, max_out)
+        out = np.asarray(out)
+        olen = np.asarray(olen)
+        return [out[i, : olen[i]].astype(np.uint8).tobytes()
+                for i in range(out.shape[0])]
+
+    def roundtrip(self, strings: list[bytes], use_pallas: bool = True) -> list[bytes]:
+        toks, n = self.encode_batch(strings, use_pallas=use_pallas)
+        max_out = max((len(s) for s in strings), default=1)
+        return self.decode_batch(toks, n, max_out, use_pallas=use_pallas)

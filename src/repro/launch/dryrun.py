@@ -1,0 +1,193 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (architecture x shape) cell on
+the production meshes and extract the roofline inputs.
+
+For each cell this script:
+  1. builds abstract state/inputs (ShapeDtypeStruct only — no allocation),
+  2. jax.jit(step).lower(...).compile() under the target mesh,
+  3. records memory_analysis(), cost_analysis(), and the collective operand
+     bytes parsed from the post-SPMD HLO,
+  4. appends one JSON record to results/dryrun/<mesh>/<arch>__<shape>.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--skip-done]
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from repro.configs import REGISTRY, runnable_cells
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.distributed.sharding import (batch_specs, cache_specs_tree,
+                                        param_shardings, replicated, use_mesh)
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import SHAPES
+from repro.models.model import cache_specs, input_specs
+from repro.models.transformer import abstract_params
+from repro.optim.adamw import AdamWConfig
+from repro.train.state import make_abstract_state, state_shardings
+from repro.train.train_step import (make_decode_step, make_prefill_step,
+                                    make_train_step)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+# v5e constants (per spec)
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+def analyze_cell(arch: str, shape_name: str, multi_pod: bool = False,
+                 fsdp: bool | None = None, microbatches: int = 1,
+                 remat: bool = True, extra_tag: str = "") -> dict:
+    cfg = REGISTRY[arch]
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if fsdp is None:
+        fsdp = cfg.n_params() * 2 > 8e9  # >8 GB of bf16 params -> FSDP
+    opt = AdamWConfig(quantized_moments=cfg.n_params() > 50e9)
+    record: dict = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": int(mesh.size), "fsdp": fsdp,
+        "quantized_moments": opt.quantized_moments,
+        "microbatches": microbatches, "remat": remat, "tag": extra_tag,
+    }
+    t0 = time.perf_counter()
+    with use_mesh(mesh):
+        inputs = input_specs(cfg, shape)
+        in_batch_sh = batch_specs(inputs, mesh)
+        if shape.kind == "train":
+            abstract = make_abstract_state(cfg, opt)
+            st_sh = state_shardings(abstract, mesh, cfg, fsdp)
+            step = make_train_step(cfg, opt, microbatches=microbatches,
+                                   remat=remat)
+            jitted = jax.jit(step, in_shardings=(st_sh, in_batch_sh),
+                             out_shardings=(st_sh, replicated(mesh)))
+            lowered = jitted.lower(abstract, inputs)
+        elif shape.kind == "prefill":
+            aparams = abstract_params(cfg)
+            p_sh = param_shardings(aparams, mesh, cfg, fsdp)
+            step = make_prefill_step(cfg, max_seq=shape.seq_len)
+            jitted = jax.jit(step, in_shardings=(p_sh, in_batch_sh))
+            lowered = jitted.lower(aparams, inputs)
+        else:  # decode
+            aparams = abstract_params(cfg)
+            p_sh = param_shardings(aparams, mesh, cfg, fsdp)
+            acache = cache_specs(cfg, shape)
+            c_sh = cache_specs_tree(acache, mesh, cfg, shape)
+            step = make_decode_step(cfg)
+            jitted = jax.jit(step, in_shardings=(p_sh, c_sh, in_batch_sh),
+                             out_shardings=(replicated(mesh), c_sh))
+            lowered = jitted.lower(aparams, acache, inputs)
+        record["lower_s"] = round(time.perf_counter() - t0, 2)
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        record["compile_s"] = round(time.perf_counter() - t1, 2)
+
+        mem = compiled.memory_analysis()
+        record["memory"] = {
+            k: int(getattr(mem, k, 0)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes")
+        } if mem is not None else {}
+        cost = compiled.cost_analysis() or {}
+        # raw XLA numbers (while bodies counted ONCE — kept for reference)
+        record["flops_hlo_raw"] = float(cost.get("flops", 0.0))
+        record["bytes_hlo_raw"] = float(cost.get("bytes accessed", 0.0))
+        text = compiled.as_text()
+        # loop-corrected per-device analysis (trip-count aware; see
+        # hlo_analysis.py). Params are read once per step on top of op traffic.
+        corr = analyze_hlo(text)
+        record["flops"] = corr["flops"]
+        record["bytes_accessed"] = corr["bytes"] + record["memory"].get(
+            "argument_size_in_bytes", 0)
+        record["collectives"] = {k: int(v) for k, v in corr["collectives"].items()}
+        record["collective_bytes_total"] = int(corr["collective_bytes"])
+    # roofline terms — analyze_hlo numbers are PER-DEVICE (post-SPMD module)
+    chips = record["chips"]
+    record["t_compute_s"] = record["flops"] / PEAK_FLOPS
+    record["t_memory_s"] = record["bytes_accessed"] / HBM_BW
+    record["t_collective_s"] = record["collective_bytes_total"] / ICI_BW
+    terms = {"compute": record["t_compute_s"], "memory": record["t_memory_s"],
+             "collective": record["t_collective_s"]}
+    record["bottleneck"] = max(terms, key=terms.get)
+    nd = 6 * cfg.n_active_params() * shape.global_batch * (
+        shape.seq_len if shape.kind == "train" else 1)
+    if shape.kind != "train":
+        nd = 2 * cfg.n_active_params() * shape.global_batch * (
+            shape.seq_len if shape.kind == "prefill" else 1)
+    record["model_flops"] = float(nd)
+    hlo_cluster_flops = record["flops"] * chips
+    record["useful_ratio"] = (record["model_flops"] / hlo_cluster_flops
+                              if hlo_cluster_flops else 0.0)
+    return record
+
+
+def cell_path(arch: str, shape: str, multi_pod: bool, tag: str = "") -> str:
+    mesh = "2x16x16" if multi_pod else "16x16"
+    d = os.path.abspath(os.path.join(RESULTS_DIR, mesh))
+    os.makedirs(d, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    return os.path.join(d, f"{arch}__{shape}{suffix}.json")
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, skip_done: bool,
+             **kw) -> dict | None:
+    path = cell_path(arch, shape, multi_pod, kw.get("extra_tag", ""))
+    if skip_done and os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    try:
+        rec = analyze_cell(arch, shape, multi_pod, **kw)
+    except Exception as e:  # a failing cell is a bug — record it loudly
+        rec = {"arch": arch, "shape": shape,
+               "mesh": "2x16x16" if multi_pod else "16x16",
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-2000:]}
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    cells = (runnable_cells() if args.all
+             else [(args.arch, args.shape)])
+    for arch, shape in cells:
+        rec = run_cell(arch, shape, args.multi_pod, args.skip_done,
+                       microbatches=args.microbatches, extra_tag=args.tag)
+        status = ("ERROR " + rec["error"]) if "error" in rec else (
+            f"ok {rec['bottleneck']:>10s} comp={rec['t_compute_s']:.4f}s "
+            f"mem={rec['t_memory_s']:.4f}s coll={rec['t_collective_s']:.4f}s "
+            f"(compile {rec.get('compile_s', 0):.0f}s)")
+        print(f"[{rec['mesh']}] {arch:24s} {shape:12s} {status}", flush=True)
+        if not args.all and "error" not in rec:
+            print("memory_analysis:", json.dumps(rec["memory"], indent=1))
+            print("cost_analysis: flops(raw)=%.4e bytes(raw)=%.4e" % (
+                rec["flops_hlo_raw"], rec["bytes_hlo_raw"]))
+            print("loop-corrected: flops=%.4e bytes=%.4e" % (
+                rec["flops"], rec["bytes_accessed"]))
+            print("collectives:", json.dumps(rec["collectives"], indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,202 @@
+"""Loop-corrected roofline extraction from compiled HLO text.
+
+XLA's HloCostAnalysis counts a while-loop body ONCE regardless of trip count
+(verified empirically in this environment), which silently under-reports
+FLOPs/bytes for scan-over-layers models by ~n_layers x. This module parses
+the post-SPMD compiled HLO text instead:
+
+  1. split the module into named computations (regions + ENTRY),
+  2. find `while` ops, map their body/condition regions, and recover the trip
+     count from the loop-bound constant in the condition region,
+  3. attribute every op to its region and scale by the product of enclosing
+     trip counts (nested scans compose: the SSD chunk scan inside the blocks
+     scan gets n_blocks x n_chunks),
+  4. dot FLOPs are reconstructed from result shape x contracted dims (operand
+     shapes resolved through a per-region symbol table, since HLO text prints
+     operands by name only),
+  5. memory traffic ~= sum over ops of (output bytes + operand bytes), with
+     aliasing-aware special cases: get-tuple-element / bitcast / parameter /
+     tuple are free; dynamic-update-slice counts only the update operand
+     (in-place); fusion sub-computations are skipped (the fusion call site
+     carries the shape).
+
+All numbers are per-device: the compiled module is the per-partition SPMD
+program. Collective bytes count each op's result size (= payload shuffled
+per device per execution).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16, "token": 0}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^(%[\w.\-]+)\s*=\s*(.+)$")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_FREE_OPS = {"parameter", "get-tuple-element", "bitcast", "tuple", "constant",
+             "after-all", "iota", "partition-id", "replica-id"}
+
+_OP_RE = re.compile(r"\s([a-z0-9\-]+)\(")
+
+
+def _shapes_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+@dataclass
+class Region:
+    name: str
+    lines: list[str] = field(default_factory=list)
+    defs: dict[str, str] = field(default_factory=dict)  # op name -> shape text
+
+
+def split_regions(text: str) -> dict[str, Region]:
+    regions: dict[str, Region] = {}
+    cur: Region | None = None
+    for line in text.splitlines():
+        s = line.strip()
+        m = re.match(r"(ENTRY\s+)?(%[\w.\-]+)\s*\(.*->.*\{", s)
+        if m:
+            cur = Region(name=m.group(2))
+            regions[m.group(2)] = cur
+            if m.group(1):
+                regions["__entry__"] = cur
+            continue
+        if s == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        dm = _DEF_RE.match(s.rstrip(","))
+        if dm:
+            name, rhs = dm.groups()
+            cur.lines.append(s)
+            shape = rhs.split(" ", 1)[0]
+            cur.defs[name] = shape
+    return regions
+
+
+def _trip_count(cond_region: Region) -> int:
+    best = 1
+    for line in cond_region.lines:
+        m = re.search(r"s32\[\]\s+constant\((\d+)\)", line)
+        if m:
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def region_multipliers(regions: dict[str, Region]) -> dict[str, float]:
+    """Multiplier per region = product of enclosing while trip counts."""
+    whiles: list[tuple[str, str, int]] = []
+    for rname, region in regions.items():
+        if rname == "__entry__":
+            continue
+        for line in region.lines:
+            if " while(" in line:
+                mb = re.search(r"body=(%[\w.\-]+)", line)
+                mc = re.search(r"condition=(%[\w.\-]+)", line)
+                if mb and mc and mc.group(1) in regions:
+                    whiles.append((rname, mb.group(1),
+                                   _trip_count(regions[mc.group(1)])))
+    mult: dict[str, float] = {regions["__entry__"].name: 1.0}
+    for _ in range(8):  # fixpoint over nesting (depth is tiny)
+        changed = False
+        for parent, body, trip in whiles:
+            if parent in mult and mult.get(body) != mult[parent] * trip:
+                mult[body] = mult[parent] * trip
+                changed = True
+        if not changed:
+            break
+    return mult
+
+
+def _operands(rhs: str) -> list[str]:
+    inner = rhs.split("(", 1)
+    if len(inner) < 2:
+        return []
+    args = inner[1].rsplit(")", 1)[0] if ")" in inner[1] else inner[1]
+    return re.findall(r"%[\w.\-]+", args.split("), ")[0])
+
+
+def analyze_hlo(text: str) -> dict:
+    """Loop-corrected per-device {flops, bytes, collectives{kind: bytes}}."""
+    regions = split_regions(text)
+    if "__entry__" not in regions:
+        return {"flops": 0.0, "bytes": 0.0, "collectives": {},
+                "collective_bytes": 0.0}
+    mult = region_multipliers(regions)
+    # global fallback symbol table (names are unique enough post-SPMD)
+    global_defs: dict[str, str] = {}
+    for r in regions.values():
+        global_defs.update(r.defs)
+
+    flops = 0.0
+    traffic = 0.0
+    coll: dict[str, float] = {}
+
+    for rname, region in regions.items():
+        if rname == "__entry__":
+            continue
+        scale = mult.get(rname)
+        if scale is None:
+            continue  # fusion / reducer sub-computations: counted at call site
+
+        def shape_of(opname: str) -> str:
+            return region.defs.get(opname) or global_defs.get(opname, "")
+
+        for line in region.lines:
+            name, rhs = _DEF_RE.match(line.rstrip(",")).groups()
+            om = _OP_RE.search(" " + rhs)
+            op = om.group(1) if om else ""
+            # result may be a tuple "(f32[..], f32[..]) op(...)": sum every
+            # shape literal before the op mnemonic (combined all-reduces!)
+            out_shape = rhs.split(f" {op}(")[0] if op else rhs.split(" ", 1)[0]
+            out_b = _shapes_bytes(out_shape)
+            kind = next((c for c in _COLLECTIVES if op == c
+                         or op == c + "-start"), None)
+            if op in _FREE_OPS:
+                continue
+            ops_list = _operands(rhs)
+            if op == "dynamic-update-slice" and len(ops_list) >= 2:
+                upd_b = _shapes_bytes(shape_of(ops_list[1]))
+                traffic += scale * 2 * upd_b          # read update + write slice
+            elif op == "while":
+                continue  # body accounted via multipliers
+            else:
+                in_b = sum(_shapes_bytes(shape_of(o)) for o in ops_list)
+                traffic += scale * (out_b + in_b)
+            if kind:
+                coll[kind] = coll.get(kind, 0.0) + scale * out_b
+            if op == "dot":
+                contracted = 1
+                mcd = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rhs)
+                lhs_shape = shape_of(ops_list[0]) if ops_list else ""
+                mdim = _SHAPE_RE.match(lhs_shape)
+                if mcd and mdim and mcd.group(1):
+                    lhs_dims = [int(d) for d in mdim.group(2).split(",") if d]
+                    for i in mcd.group(1).split(","):
+                        contracted *= lhs_dims[int(i)]
+                out_elems = 1
+                sm = _SHAPE_RE.match(out_shape)
+                if sm:
+                    for d in sm.group(2).split(","):
+                        if d:
+                            out_elems *= int(d)
+                flops += scale * 2.0 * out_elems * contracted
+            elif op == "convolution":
+                flops += scale * 2.0 * out_b
+
+    return {"flops": flops, "bytes": traffic, "collectives": coll,
+            "collective_bytes": float(sum(coll.values()))}

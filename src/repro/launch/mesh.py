@@ -1,0 +1,22 @@
+"""Production mesh construction (spec: single-pod 16x16, multi-pod 2x16x16).
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state, so smoke tests and benches see the real (1-device) CPU.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many (host) devices exist — for tests."""
+    n = len(jax.devices())
+    assert data * model <= n, (data, model, n)
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,86 @@
+"""Roofline report generator: reads results/dryrun/*/*.json and emits the
+EXPERIMENTS.md §Roofline table (three terms, bottleneck, MODEL_FLOPS ratio,
+and the 'what would move it' line per cell).
+
+Usage: PYTHONPATH=src python -m repro.launch.roofline [--mesh 16x16] [--md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+MOVE_HINTS = {
+    "compute": "more useful-FLOP fraction: cut remat recompute / capacity padding",
+    "memory": "fuse scan-carried temporaries; larger microbatch per device; bf16 master",
+    "collective": "reshard to cut per-layer all-gathers; overlap via scanned FSDP; "
+                  "int8-compress cross-pod grads",
+}
+
+
+def load_records(mesh: str) -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, mesh, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if "error" not in rec:
+            rec["_file"] = os.path.basename(path)
+            out.append(rec)
+    return out
+
+
+def roofline_fraction(rec: dict) -> float:
+    """Useful-compute fraction of the bound step time: how close the cell is
+    to its compute roofline = model_flops / (chips * peak * bound_time)."""
+    bound = max(rec["t_compute_s"], rec["t_memory_s"], rec["t_collective_s"])
+    if bound <= 0:
+        return 0.0
+    ideal = rec["model_flops"] / rec["chips"] / 197e12
+    return ideal / bound
+
+
+def fmt_row(rec: dict) -> dict:
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "tag": rec.get("tag", ""),
+        "t_compute_s": round(rec["t_compute_s"], 5),
+        "t_memory_s": round(rec["t_memory_s"], 5),
+        "t_collective_s": round(rec["t_collective_s"], 5),
+        "bottleneck": rec["bottleneck"],
+        "useful_ratio": round(rec.get("useful_ratio", 0), 4),
+        "roofline_frac": round(roofline_fraction(rec), 5),
+        "move": MOVE_HINTS[rec["bottleneck"]],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    rows = [fmt_row(r) for r in load_records(args.mesh)
+            if not r.get("tag")]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    if args.md:
+        print("| arch | shape | compute (s) | memory (s) | collective (s) | "
+              "bottleneck | MODEL/HLO | roofline frac |")
+        print("|---|---|---|---|---|---|---|---|")
+        for r in rows:
+            print(f"| {r['arch']} | {r['shape']} | {r['t_compute_s']} | "
+                  f"{r['t_memory_s']} | {r['t_collective_s']} | "
+                  f"{r['bottleneck']} | {r['useful_ratio']} | "
+                  f"{r['roofline_frac']} |")
+    else:
+        for r in rows:
+            print(",".join(str(r[k]) for k in
+                           ("arch", "shape", "t_compute_s", "t_memory_s",
+                            "t_collective_s", "bottleneck", "useful_ratio",
+                            "roofline_frac")))
+
+
+if __name__ == "__main__":
+    main()

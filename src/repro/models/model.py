@@ -1,0 +1,125 @@
+"""Model entry points: family dispatch, loss, serve paths, input specs.
+
+`input_specs(cfg, shape)` produces ShapeDtypeStruct stand-ins for every model
+input of a (architecture x shape) cell — weak-type-correct, shardable, no
+device allocation — consumed by both the launcher and the dry-run.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import SHAPES, ArchConfig, ShapeConfig
+from repro.models.transformer import (abstract_cache, abstract_params,
+                                      decode_step, encoder_forward, forward,
+                                      init_cache, init_params, prefill)
+
+
+def get_memory(params, batch: dict, cfg: ArchConfig):
+    """Resolve the cross-attention memory for encdec/vlm families."""
+    if cfg.family == "encdec":
+        return encoder_forward(params, batch["enc_embed"], cfg)
+    if cfg.family == "vlm":
+        return batch["vision_embed"]
+    return None
+
+
+def model_forward(params, batch: dict, cfg: ArchConfig, remat: bool = True):
+    memory = get_memory(params, batch, cfg)
+    return forward(params, batch["tokens"], cfg, memory=memory, remat=remat)
+
+
+def loss_fn(params, batch: dict, cfg: ArchConfig, remat: bool = True):
+    """Token-mean cross entropy in f32 (stable logsumexp)."""
+    logits = model_forward(params, batch, cfg, remat=remat).astype(jnp.float32)
+    targets = batch["targets"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    return nll.mean()
+
+
+def serve_prefill(params, batch: dict, cfg: ArchConfig, max_seq: int | None = None):
+    memory = get_memory(params, batch, cfg)
+    return prefill(params, batch["tokens"], cfg, memory=memory,
+                   max_seq=max_seq)
+
+
+def serve_decode(params, cache, batch: dict, cfg: ArchConfig):
+    return decode_step(params, cache, batch["token"], cfg)
+
+
+# --------------------------------------------------------------- input specs
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig | str) -> dict:
+    """ShapeDtypeStruct stand-ins for the cell's model inputs.
+
+    train   -> {"tokens","targets"} (+ modality stubs)
+    prefill -> {"tokens"}           (+ modality stubs)
+    decode  -> {"token"}            (cache specs come from cache_specs())
+    """
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    specs: dict = {}
+    if shape.kind == "train":
+        specs["tokens"] = _sds((B, S), jnp.int32)
+        specs["targets"] = _sds((B, S), jnp.int32)
+    elif shape.kind == "prefill":
+        specs["tokens"] = _sds((B, S), jnp.int32)
+    else:  # decode: one new token against a seq_len cache
+        specs["token"] = _sds((B, 1), jnp.int32)
+    if cfg.family == "encdec" and shape.kind != "decode":
+        specs["enc_embed"] = _sds((B, cfg.enc_seq, cfg.d_model), dt)
+    if cfg.family == "vlm" and shape.kind != "decode":
+        specs["vision_embed"] = _sds((B, cfg.n_vision_tokens, cfg.d_model), dt)
+    return specs
+
+
+def param_specs(cfg: ArchConfig):
+    return abstract_params(cfg)
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeConfig | str):
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    assert shape.kind == "decode"
+    return abstract_cache(cfg, shape.global_batch, shape.seq_len)
+
+
+# ------------------------------------------------------------ concrete build
+def build_params(cfg: ArchConfig, seed: int = 0):
+    return init_params(jax.random.PRNGKey(seed), cfg)
+
+
+def build_cache(cfg: ArchConfig, batch: int, max_seq: int):
+    return init_cache(cfg, batch, max_seq)
+
+
+def demo_batch(cfg: ArchConfig, batch: int, seq: int, kind: str = "train",
+               seed: int = 0) -> dict:
+    """Small concrete batch for smoke tests."""
+    rng = np.random.default_rng(seed)
+    out: dict = {}
+    dt = jnp.dtype(cfg.dtype)
+    if kind == "decode":
+        out["token"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (batch, 1)), jnp.int32)
+    else:
+        toks = rng.integers(0, cfg.vocab_size, (batch, seq + 1))
+        out["tokens"] = jnp.asarray(toks[:, :-1], jnp.int32)
+        if kind == "train":
+            out["targets"] = jnp.asarray(toks[:, 1:], jnp.int32)
+    if cfg.family == "encdec" and kind != "decode":
+        out["enc_embed"] = jnp.asarray(
+            rng.normal(size=(batch, cfg.enc_seq, cfg.d_model)), dt)
+    if cfg.family == "vlm" and kind != "decode":
+        out["vision_embed"] = jnp.asarray(
+            rng.normal(size=(batch, cfg.n_vision_tokens, cfg.d_model)), dt)
+    return out

@@ -1,0 +1,190 @@
+"""Mamba2 / SSD (state-space duality) blocks — for the `ssm` and `hybrid`
+families (mamba2-780m, jamba-1.5-large).
+
+Training/prefill uses the chunked SSD algorithm (intra-chunk quadratic term +
+inter-chunk state recurrence via lax.scan over chunks), which is the
+TPU-friendly formulation: all heavy compute is batched einsums over
+(chunk x chunk) tiles, and the sequential dependency is only O(S / chunk).
+Decode keeps an O(1) recurrent state per layer: (B, H, P, N) SSM state plus a
+(B, conv-1, channels) convolution tail.
+
+Tensor-parallel layout (head-parallel SSM TP): the input projection is split
+into separately-shardable matrices — w_z / w_x (column-parallel over the
+inner dim = H*P), w_dt (column-parallel over heads), w_BC (tiny, replicated)
+— so z, x, dt, the SSM state and y are all sharded over heads on the 'model'
+axis with no mid-layer resharding; w_out is row-parallel (one all-reduce per
+layer, same as attention's wo).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import batch_axes, constrain, rms_norm
+
+_G = 1  # B/C projection groups (Mamba2 default n_groups=1)
+
+
+def ssm_dims(cfg) -> tuple[int, int, int, int]:
+    inner = cfg.ssm_expand * cfg.d_model
+    P = cfg.ssm_head_dim
+    H = inner // P
+    N = cfg.ssm_state
+    return inner, H, P, N
+
+
+def init_ssm(key, cfg, layer_dtype) -> dict:
+    D = cfg.d_model
+    inner, H, P, N = ssm_dims(cfg)
+    ks = jax.random.split(key, 6)
+    s = D ** -0.5
+    return {
+        "w_z": jax.random.normal(ks[0], (D, inner), layer_dtype) * s,
+        "w_x": jax.random.normal(ks[1], (D, inner), layer_dtype) * s,
+        "w_BC": jax.random.normal(ks[2], (D, 2 * _G * N), layer_dtype) * s,
+        "w_dt": jax.random.normal(ks[3], (D, H), layer_dtype) * s,
+        "conv_x": jax.random.normal(ks[4], (cfg.ssm_conv, inner), layer_dtype) * 0.1,
+        "conv_bx": jnp.zeros((inner,), layer_dtype),
+        "conv_BC": jax.random.normal(ks[5], (cfg.ssm_conv, 2 * _G * N),
+                                     layer_dtype) * 0.1,
+        "conv_bBC": jnp.zeros((2 * _G * N,), layer_dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": jnp.zeros((inner,), layer_dtype),
+        "w_out": jax.random.normal(ks[2], (inner, D), layer_dtype) * (inner ** -0.5),
+    }
+
+
+def _causal_conv(u, conv_w, conv_b):
+    """Depthwise causal conv1d over (B, S, C) with kernel (W, C)."""
+    W = conv_w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + u.shape[1], :] * conv_w[i] for i in range(W))
+    return jax.nn.silu(out + conv_b)
+
+
+def ssd_apply(params, x_in, cfg, chunk: int = 128, return_state: bool = False):
+    """Full-sequence SSD. x_in: (B, S, D) -> (B, S, D) [, decode cache]."""
+    Bsz, S, Dm = x_in.shape
+    inner, H, P, N = ssm_dims(cfg)
+    z = jnp.einsum("bsd,di->bsi", x_in, params["w_z"])
+    x_raw = jnp.einsum("bsd,di->bsi", x_in, params["w_x"])
+    BC_raw = jnp.einsum("bsd,dn->bsn", x_in, params["w_BC"])
+    dt_raw = jnp.einsum("bsd,dh->bsh", x_in, params["w_dt"])
+
+    xc = _causal_conv(x_raw, params["conv_x"], params["conv_bx"])
+    BCc = _causal_conv(BC_raw, params["conv_BC"], params["conv_bBC"])
+    x = xc.reshape(Bsz, S, H, P)
+    Bm = BCc[..., : _G * N].reshape(Bsz, S, _G, N)
+    Cm = BCc[..., _G * N :].reshape(Bsz, S, _G, N)
+    x = constrain(x, batch_axes()[0], None, "model", None)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(params["A_log"])                                         # (H,)
+    a = dt * A[None, None, :]                                             # log-decay
+
+    if S % chunk != 0:
+        chunk = S  # smoke-test sizes
+    nc = S // chunk
+    ar = a.reshape(Bsz, nc, chunk, H)
+    dtr = dt.reshape(Bsz, nc, chunk, H)
+    xr = x.reshape(Bsz, nc, chunk, H, P)
+    Br = Bm.reshape(Bsz, nc, chunk, _G, N)
+    Cr = Cm.reshape(Bsz, nc, chunk, _G, N)
+
+    cum = jnp.cumsum(ar, axis=2)                    # (B,nc,Q,H)
+    total = cum[:, :, -1, :]                        # (B,nc,H)
+
+    # ---- intra-chunk (quadratic within chunk) ----
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Q,Q,H)
+    iq = np.arange(chunk)
+    causal = (iq[:, None] >= iq[None, :])
+    # mask in log-space BEFORE exp: exp of masked (positive) entries would be
+    # inf and poison the backward pass through jnp.where.
+    li = jnp.where(causal[None, None, :, :, None], li, -1e30)
+    L = jnp.exp(li)
+    cb = jnp.einsum("bcqgn,bckgn->bcqkg", Cr, Br)        # (B,nc,Q,Q,G)
+    att = cb[..., 0]                                     # G == 1: (B,nc,Q,Q)
+    y_intra = jnp.einsum("bcqk,bcqkh,bckh,bckhp->bcqhp",
+                         att, L, dtr, xr)
+
+    # ---- chunk states ----
+    decay_to_end = jnp.exp(total[:, :, None, :] - cum)   # (B,nc,Q,H)
+    states = jnp.einsum("bckh,bckh,bckn,bckhp->bchpn",
+                        decay_to_end, dtr, Br[:, :, :, 0, :], xr)
+
+    # ---- inter-chunk recurrence ----
+    def scan_fn(carry, inp):
+        st, tot = inp
+        new = carry * jnp.exp(tot)[:, :, None, None] + st
+        return new, carry
+
+    init = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (states.astype(jnp.float32).swapaxes(0, 1), total.swapaxes(0, 1)))
+    prev_states = prev_states.swapaxes(0, 1)             # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum("bcqn,bchpn,bcqh->bcqhp",
+                         Cr[:, :, :, 0, :], prev_states, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    y = y + params["D"][None, None, :, None] * x
+    y = y.reshape(Bsz, S, inner).astype(x_in.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, params["w_out"])
+    if return_state:
+        W = params["conv_x"].shape[0]
+        if S >= W - 1:
+            tail_x = x_raw[:, S - (W - 1):, :]
+            tail_BC = BC_raw[:, S - (W - 1):, :]
+        else:
+            tail_x = jnp.pad(x_raw, ((0, 0), (W - 1 - S, 0), (0, 0)))
+            tail_BC = jnp.pad(BC_raw, ((0, 0), (W - 1 - S, 0), (0, 0)))
+        return out, {"state": final_state,
+                     "conv_x": tail_x.astype(x_in.dtype),
+                     "conv_BC": tail_BC.astype(x_in.dtype)}
+    return out
+
+
+def init_ssm_cache(cfg, batch: int, dtype) -> dict:
+    inner, H, P, N = ssm_dims(cfg)
+    return {
+        "state": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv_x": jnp.zeros((batch, cfg.ssm_conv - 1, inner), dtype),
+        "conv_BC": jnp.zeros((batch, cfg.ssm_conv - 1, 2 * _G * N), dtype),
+    }
+
+
+def ssd_decode(params, x_in, cache, cfg):
+    """One-token recurrent step. x_in: (B, 1, D) -> (B, 1, D), new cache."""
+    Bsz = x_in.shape[0]
+    inner, H, P, N = ssm_dims(cfg)
+    z = jnp.einsum("bsd,di->bsi", x_in, params["w_z"])[:, 0]
+    x_raw = jnp.einsum("bsd,di->bsi", x_in, params["w_x"])[:, 0]
+    BC_raw = jnp.einsum("bsd,dn->bsn", x_in, params["w_BC"])[:, 0]
+    dt_raw = jnp.einsum("bsd,dh->bsh", x_in, params["w_dt"])[:, 0]
+
+    win_x = jnp.concatenate([cache["conv_x"], x_raw[:, None, :]], axis=1)
+    win_BC = jnp.concatenate([cache["conv_BC"], BC_raw[:, None, :]], axis=1)
+    xc = jax.nn.silu(jnp.einsum("bwc,wc->bc", win_x, params["conv_x"])
+                     + params["conv_bx"])
+    BCc = jax.nn.silu(jnp.einsum("bwc,wc->bc", win_BC, params["conv_BC"])
+                      + params["conv_bBC"])
+    x = xc.reshape(Bsz, H, P)
+    Bm = BCc[..., : _G * N].reshape(Bsz, N)
+    Cm = BCc[..., _G * N :].reshape(Bsz, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * A[None, :])                                      # (B,H)
+    state = cache["state"] * decay[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, x.astype(jnp.float32), Bm.astype(jnp.float32))
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), state)
+    y = y + params["D"][None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(Bsz, inner).astype(x_in.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bi,id->bd", y, params["w_out"])[:, None, :]
+    return out, {"state": state, "conv_x": win_x[:, 1:, :],
+                 "conv_BC": win_BC[:, 1:, :]}

@@ -1,0 +1,368 @@
+"""Unified decoder stack for all 10 assigned architectures.
+
+The model is a `lax.scan` over *blocks*; a block is the architecture's layer
+period (gemma2: [local, global]; jamba: [7x mamba + 1x attn, MoE every 2nd];
+llama-vision: [cross-attn + 4x self]; plain dense/MoE: 1 layer). Scanning
+keeps the HLO O(block) instead of O(layers): 100-layer models compile in the
+same time as 2-layer ones, and per-layer FSDP all-gathers pipeline inside
+the scan (latency hiding).
+
+Three entry points per architecture (built in repro.models.model):
+  forward      — full-sequence logits (training)
+  prefill      — forward + materialised KV/SSM caches, last-position logits
+  decode_step  — one token against the caches
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import (attention, batch_axes, constrain,
+                                 decode_attention, init_attention, init_mlp,
+                                 init_moe, mlp, moe, rms_norm, softcap)
+from repro.models.ssm import init_ssm, init_ssm_cache, ssd_apply, ssd_decode
+
+Params = dict[str, Any]
+
+
+# --------------------------------------------------------------- layer plan
+@dataclass(frozen=True)
+class SubLayer:
+    kind: str            # "attn" | "ssm" | "cross"
+    window: int | None   # sliding window for attn
+    use_moe: bool
+    cap: float | None    # attn logit softcap
+
+
+def block_plan(cfg: ArchConfig) -> list[SubLayer]:
+    """Static layer composition of one block (same for every block)."""
+    plan: list[SubLayer] = []
+    for i in range(cfg.layers_per_block):
+        use_moe = bool(cfg.n_experts) and (i % cfg.moe_every == cfg.moe_every - 1)
+        if cfg.family == "encdec":
+            # whisper decoder layer: self-attn + cross-attn + one MLP
+            plan.append(SubLayer("attn_cross", None, use_moe, None))
+        elif cfg.family == "ssm":
+            plan.append(SubLayer("ssm", None, False, None))
+        elif cfg.family == "hybrid":
+            is_attn = i == cfg.layers_per_block - 1
+            plan.append(SubLayer("attn" if is_attn else "ssm",
+                                 cfg.sliding_window, use_moe, None))
+        elif cfg.family == "vlm" and cfg.cross_attn_period and i == 0:
+            plan.append(SubLayer("cross", None, use_moe, None))
+        elif cfg.local_global_period:
+            local = i % cfg.local_global_period == 0
+            plan.append(SubLayer("attn",
+                                 cfg.sliding_window if local else None,
+                                 use_moe, cfg.attn_logit_softcap))
+        else:
+            plan.append(SubLayer("attn", cfg.sliding_window, use_moe,
+                                 cfg.attn_logit_softcap))
+    return plan
+
+
+# -------------------------------------------------------------------- init
+def _init_sublayer(key, sub: SubLayer, cfg: ArchConfig, dt) -> Params:
+    k1, k2 = jax.random.split(key)
+    has_ffn = sub.use_moe or cfg.d_ff > 0
+    p: Params = {"norm1": jnp.zeros((cfg.d_model,), dt)}
+    if has_ffn:
+        p["norm2"] = jnp.zeros((cfg.d_model,), dt)
+    if sub.kind in ("attn", "cross", "attn_cross"):
+        p["attn"] = init_attention(k1, cfg, dt)
+        if sub.kind == "cross":
+            p["xgate"] = jnp.zeros((), jnp.float32)  # gated residual (llama-vision)
+        if sub.kind == "attn_cross":
+            k1b = jax.random.fold_in(k1, 1)
+            p["xattn"] = init_attention(k1b, cfg, dt)
+            p["norm1x"] = jnp.zeros((cfg.d_model,), dt)
+    else:
+        p["ssm"] = init_ssm(k1, cfg, dt)
+    if has_ffn:
+        p["ffn"] = init_moe(k2, cfg, dt) if sub.use_moe else init_mlp(k2, cfg, dt)
+    return p
+
+
+def init_block(key, cfg: ArchConfig, dt) -> Params:
+    plan = block_plan(cfg)
+    keys = jax.random.split(key, len(plan))
+    return {f"l{i}": _init_sublayer(keys[i], sub, cfg, dt)
+            for i, sub in enumerate(plan)}
+
+
+def _init_encoder_layer(key, cfg: ArchConfig, dt) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"norm1": jnp.zeros((cfg.d_model,), dt),
+            "norm2": jnp.zeros((cfg.d_model,), dt),
+            "attn": init_attention(k1, cfg, dt),
+            "ffn": init_mlp(k2, cfg, dt)}
+
+
+def init_params(key, cfg: ArchConfig) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    kE, kB, kH, kN, kEnc = jax.random.split(key, 5)
+    V, D = cfg.vocab_size, cfg.d_model
+    params: Params = {
+        "embed": jax.random.normal(kE, (V, D), dt) * (D ** -0.5),
+        "final_norm": jnp.zeros((D,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(kH, (D, V), dt) * (D ** -0.5)
+    bkeys = jax.random.split(kB, cfg.n_blocks)
+    params["blocks"] = jax.vmap(lambda k: init_block(k, cfg, dt))(bkeys)
+    if cfg.enc_layers:
+        ekeys = jax.random.split(kEnc, cfg.enc_layers)
+        params["enc_blocks"] = jax.vmap(
+            lambda k: _init_encoder_layer(k, cfg, dt))(ekeys)
+        params["enc_norm"] = jnp.zeros((D,), dt)
+    return params
+
+
+def abstract_params(cfg: ArchConfig) -> Params:
+    """Shape/dtype-only params (no allocation) for the dry-run."""
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+# ------------------------------------------------------------------ encoder
+def encoder_forward(params, enc_embed, cfg: ArchConfig):
+    """Whisper-style bidirectional encoder over stub frame embeddings."""
+
+    def layer(x, lp):
+        h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+        x = x + attention(lp["attn"], h, h, cfg, causal=False, window=None,
+                          cap=None)
+        h = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        x = x + mlp(lp["ffn"], h)
+        return x, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(layer), enc_embed, params["enc_blocks"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+# ------------------------------------------------------------------ forward
+def _apply_sublayer(x, lp, sub: SubLayer, cfg: ArchConfig, memory, q_offset=0):
+    h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+    if sub.kind == "ssm":
+        x = x + ssd_apply(lp["ssm"], h, cfg)
+    elif sub.kind == "cross":
+        att = attention(lp["attn"], h, memory, cfg, causal=False, window=None,
+                        cap=None)
+        x = x + jnp.tanh(lp["xgate"]).astype(x.dtype) * att
+    else:
+        x = x + attention(lp["attn"], h, h, cfg, causal=True,
+                          window=sub.window, cap=sub.cap, q_offset=q_offset)
+        if sub.kind == "attn_cross":
+            hx = rms_norm(x, lp["norm1x"], cfg.norm_eps)
+            x = x + attention(lp["xattn"], hx, memory, cfg, causal=False,
+                              window=None, cap=None)
+    if "ffn" not in lp:
+        return x
+    h = rms_norm(x, lp["norm2"], cfg.norm_eps)
+    ffn = moe(lp["ffn"], h, cfg) if sub.use_moe else mlp(lp["ffn"], h)
+    return x + ffn
+
+
+def forward(params, tokens, cfg: ArchConfig, memory=None, remat: bool = True):
+    """Full-sequence logits: tokens (B, S) int32 -> (B, S, V)."""
+    plan = block_plan(cfg)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, batch_axes()[0], None, None)
+
+    def block(x, bp):
+        for i, sub in enumerate(plan):
+            x = _apply_sublayer(x, bp[f"l{i}"], sub, cfg, memory)
+        x = constrain(x, batch_axes()[0], None, None)
+        return x, None
+
+    blk = jax.checkpoint(block) if remat else block
+    x, _ = jax.lax.scan(blk, x, params["blocks"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    logits = softcap(logits, cfg.final_logit_softcap)
+    return constrain(logits, batch_axes()[0], None, "model")
+
+
+# ------------------------------------------------------------------- caches
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, memory=None) -> Params:
+    """Per-block decode caches. Attention sublayers get (B, S_cache, K, hd)
+    rings (S_cache = window if SWA else max_seq); SSM sublayers get O(1)
+    recurrent state; cross sublayers precompute nothing here (memory K/V are
+    recomputed from the stub embeddings at prefill and stored)."""
+    dt = jnp.dtype(cfg.dtype)
+    plan = block_plan(cfg)
+    K, hd = cfg.n_kv_heads, cfg.hd
+
+    def one_block(_):
+        cache: Params = {}
+        for i, sub in enumerate(plan):
+            if sub.kind == "ssm":
+                cache[f"l{i}"] = init_ssm_cache(cfg, batch, dt)
+            elif sub.kind == "cross":
+                S = max(1, cfg.n_vision_tokens)
+                cache[f"l{i}"] = {"k": jnp.zeros((batch, S, K, hd), dt),
+                                  "v": jnp.zeros((batch, S, K, hd), dt)}
+            else:
+                S = min(sub.window, max_seq) if sub.window else max_seq
+                c = {"k": jnp.zeros((batch, S, K, hd), dt),
+                     "v": jnp.zeros((batch, S, K, hd), dt)}
+                if sub.kind == "attn_cross":
+                    Se = max(1, cfg.enc_seq)
+                    c["xk"] = jnp.zeros((batch, Se, K, hd), dt)
+                    c["xv"] = jnp.zeros((batch, Se, K, hd), dt)
+                cache[f"l{i}"] = c
+        return cache
+
+    idx = jnp.arange(cfg.n_blocks)
+    return {"blocks": jax.vmap(one_block)(idx), "pos": jnp.zeros((), jnp.int32)}
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_seq: int) -> Params:
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_seq))
+
+
+# ------------------------------------------------------------------- decode
+def decode_step(params, cache, token, cfg: ArchConfig, memory=None):
+    """One decode step: token (B, 1) int32, cache from init_cache/prefill.
+
+    Returns (logits (B, V), new_cache)."""
+    plan = block_plan(cfg)
+    pos = cache["pos"]
+    x = jnp.take(params["embed"], token, axis=0)
+
+    def block(x, scans):
+        bp, bc = scans
+        new_bc = dict(bc)
+        for i, sub in enumerate(plan):
+            lp, lc = bp[f"l{i}"], bc[f"l{i}"]
+            h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+            if sub.kind == "ssm":
+                out, new_lc = ssd_decode(lp["ssm"], h, lc, cfg)
+                x = x + out
+            elif sub.kind == "cross":
+                att = _cross_decode(lp, h, lc, cfg)
+                x = x + jnp.tanh(lp["xgate"]).astype(x.dtype) * att
+                new_lc = lc
+            else:
+                out, nk, nv = decode_attention(lp["attn"], h, lc["k"], lc["v"],
+                                               pos, cfg, window=sub.window,
+                                               cap=sub.cap)
+                x = x + out
+                new_lc = dict(lc)
+                new_lc.update(k=nk, v=nv)
+                if sub.kind == "attn_cross":
+                    hx = rms_norm(x, lp["norm1x"], cfg.norm_eps)
+                    x = x + _cross_decode(
+                        {"attn": lp["xattn"]}, hx,
+                        {"k": lc["xk"], "v": lc["xv"]}, cfg)
+            if "ffn" in lp:
+                h = rms_norm(x, lp["norm2"], cfg.norm_eps)
+                ffn = moe(lp["ffn"], h, cfg) if sub.use_moe else mlp(lp["ffn"], h)
+                x = x + ffn
+            new_bc[f"l{i}"] = new_lc
+        return x, new_bc
+
+    x, new_blocks = jax.lax.scan(block, x, (params["blocks"], cache["blocks"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)[:, 0]
+    logits = softcap(logits, cfg.final_logit_softcap)
+    return logits, {"blocks": new_blocks, "pos": pos + 1}
+
+
+def _cross_decode(lp, h, lc, cfg):
+    """Cross-attention against cached memory K/V (decode path)."""
+    B = h.shape[0]
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dh->bsh", h, lp["attn"]["wq"]).reshape(B, 1, H, hd)
+    rep = H // K
+    qh = q.reshape(B, K, rep, hd)
+    scores = jnp.einsum("bkrh,bskh->bkrs", qh, lc["k"]).astype(jnp.float32)
+    probs = jax.nn.softmax(scores * (hd ** -0.5), axis=-1).astype(h.dtype)
+    out = jnp.einsum("bkrs,bskh->bkrh", probs, lc["v"]).reshape(B, 1, H * hd)
+    return jnp.einsum("bsx,xy->bsy", out, lp["attn"]["wo"])
+
+
+# ------------------------------------------------------------------ prefill
+def prefill(params, tokens, cfg: ArchConfig, memory=None, max_seq=None):
+    """Process a prompt, returning (last-position logits, filled caches).
+
+    Caches are built by re-projecting K/V per block (the attention itself is
+    the chunked path from `forward`). SSM blocks return their final state.
+    """
+    B, S = tokens.shape
+    max_seq = max_seq or S
+    plan = block_plan(cfg)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, batch_axes()[0], None, None)
+    dt = jnp.dtype(cfg.dtype)
+    K, hd = cfg.n_kv_heads, cfg.hd
+
+    def block(x, bp):
+        cache: Params = {}
+        for i, sub in enumerate(plan):
+            lp = bp[f"l{i}"]
+            h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+            if sub.kind == "ssm":
+                out, st = ssd_apply(lp["ssm"], h, cfg, return_state=True)
+                x = x + out
+                cache[f"l{i}"] = st
+            elif sub.kind == "cross":
+                att = attention(lp["attn"], h, memory, cfg, causal=False,
+                                window=None, cap=None)
+                x = x + jnp.tanh(lp["xgate"]).astype(x.dtype) * att
+                mk = jnp.einsum("bsd,dh->bsh", memory, lp["attn"]["wk"])
+                mv = jnp.einsum("bsd,dh->bsh", memory, lp["attn"]["wv"])
+                Sm = memory.shape[1]
+                cache[f"l{i}"] = {"k": mk.reshape(B, Sm, K, hd).astype(dt),
+                                  "v": mv.reshape(B, Sm, K, hd).astype(dt)}
+            else:
+                x = x + attention(lp["attn"], h, h, cfg, causal=True,
+                                  window=sub.window, cap=sub.cap)
+                # re-project K/V into the ring cache layout
+                kf = jnp.einsum("bsd,dh->bsh", h, lp["attn"]["wk"])
+                vf = jnp.einsum("bsd,dh->bsh", h, lp["attn"]["wv"])
+                if cfg.qkv_bias:
+                    kf, vf = kf + lp["attn"]["bk"], vf + lp["attn"]["bv"]
+                from repro.models.layers import rope as _rope
+                kf = _rope(kf.reshape(B, S, K, hd),
+                           jnp.arange(S, dtype=jnp.int32), cfg.rope_theta)
+                vf = vf.reshape(B, S, K, hd)
+                Sc = min(sub.window, max_seq) if sub.window else max_seq
+                if Sc >= S:
+                    pad = ((0, 0), (0, Sc - S), (0, 0), (0, 0))
+                    c = {"k": jnp.pad(kf, pad).astype(dt),
+                         "v": jnp.pad(vf, pad).astype(dt)}
+                else:  # SWA ring: keep the last window, rotated to slot order
+                    tail_k, tail_v = kf[:, -Sc:], vf[:, -Sc:]
+                    shift = S % Sc
+                    c = {"k": jnp.roll(tail_k, shift, axis=1).astype(dt),
+                         "v": jnp.roll(tail_v, shift, axis=1).astype(dt)}
+                if sub.kind == "attn_cross":
+                    hx = rms_norm(x, lp["norm1x"], cfg.norm_eps)
+                    x = x + attention(lp["xattn"], hx, memory, cfg,
+                                      causal=False, window=None, cap=None)
+                    xk = jnp.einsum("bsd,dh->bsh", memory, lp["xattn"]["wk"])
+                    xv = jnp.einsum("bsd,dh->bsh", memory, lp["xattn"]["wv"])
+                    Sm = memory.shape[1]
+                    c["xk"] = xk.reshape(B, Sm, K, hd).astype(dt)
+                    c["xv"] = xv.reshape(B, Sm, K, hd).astype(dt)
+                cache[f"l{i}"] = c
+            if "ffn" in lp:
+                h = rms_norm(x, lp["norm2"], cfg.norm_eps)
+                ffn = moe(lp["ffn"], h, cfg) if sub.use_moe else mlp(lp["ffn"], h)
+                x = x + ffn
+        x = constrain(x, batch_axes()[0], None, None)
+        return x, cache
+
+    x, caches = jax.lax.scan(jax.checkpoint(block), x, params["blocks"])
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)[:, 0]
+    logits = softcap(logits, cfg.final_logit_softcap)
+    return logits, {"blocks": caches, "pos": jnp.full((), S, jnp.int32)}

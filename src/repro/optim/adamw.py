@@ -1,0 +1,136 @@
+"""AdamW with optional 8-bit block-quantised moments (distributed trick #1).
+
+No optax in this environment — the optimizer is implemented from scratch as
+pure pytree transforms. The 8-bit variant stores both Adam moments as int8
+with per-block (256-element) f32 scales: 2.06 bytes/param of optimizer state
+instead of 8, which is what lets the 398B hybrid fit a 256-chip pod
+(EXPERIMENTS.md §Dry-run). Moments follow the params' sharding extended by
+the ZeRO-1 'data' axis (repro.distributed.sharding).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    quantized_moments: bool = False
+
+
+# ----------------------------------------------------------- 8-bit moments
+def _pad_len(n: int) -> int:
+    return (n + BLOCK - 1) // BLOCK * BLOCK
+
+
+def quantize_q8(x: jnp.ndarray) -> dict:
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = _pad_len(n) - n
+    blocks = jnp.pad(flat, (0, pad)).reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(jnp.float32)}
+
+
+def dequantize_q8(qs: dict, shape) -> jnp.ndarray:
+    blocks = qs["q"].astype(jnp.float32) * qs["scale"]
+    return blocks.reshape(-1)[: _deq_size(shape)].reshape(shape)
+
+
+def _deq_size(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+# ------------------------------------------------------------------- state
+def init_state(params, cfg: AdamWConfig):
+    def zeros_like_moment(p):
+        if cfg.quantized_moments:
+            n = _pad_len(p.size)
+            return {"q": jnp.zeros((n // BLOCK, BLOCK), jnp.int8),
+                    "scale": jnp.zeros((n // BLOCK, 1), jnp.float32)}
+        return jnp.zeros_like(p, dtype=jnp.float32)
+
+    return {
+        "m": jax.tree.map(zeros_like_moment, params),
+        "v": jax.tree.map(zeros_like_moment, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_state(abstract_params, cfg: AdamWConfig):
+    return jax.eval_shape(partial(init_state, cfg=cfg), abstract_params)
+
+
+# ------------------------------------------------------------------ update
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in leaves))
+
+
+def apply_updates(params, grads, state, cfg: AdamWConfig,
+                  lr_scale: jnp.ndarray | float = 1.0):
+    """One AdamW step. Returns (new_params, new_state)."""
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** count.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** count.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        if cfg.quantized_moments:
+            mf = dequantize_q8(m, p.shape)
+            vf = dequantize_q8(v, p.shape)
+        else:
+            mf, vf = m, v
+        mf = b1 * mf + (1 - b1) * g
+        vf = b2 * vf + (1 - b2) * jnp.square(g)
+        step = (mf / bc1) / (jnp.sqrt(vf / bc2) + cfg.eps)
+        newp = (p.astype(jnp.float32)
+                - lr * (step + cfg.weight_decay * p.astype(jnp.float32)))
+        if cfg.quantized_moments:
+            return newp.astype(p.dtype), quantize_q8(mf), quantize_q8(vf)
+        return newp.astype(p.dtype), mf, vf
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    is_q = cfg.quantized_moments
+    leafq = (lambda x: isinstance(x, dict) and "q" in x) if is_q else None
+    flat_m = jax.tree_util.tree_flatten(state["m"], is_leaf=leafq)[0]
+    flat_v = jax.tree_util.tree_flatten(state["v"], is_leaf=leafq)[0]
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "count": count}
+
+
+# ---------------------------------------------------------------- schedule
+def cosine_schedule(step: jnp.ndarray, warmup: int = 100,
+                    total: int = 10_000, floor: float = 0.1) -> jnp.ndarray:
+    """Relative LR multiplier: linear warmup then cosine to `floor`."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, step / max(1, warmup))
+    prog = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return warm * cos

@@ -1,0 +1,74 @@
+"""Train state pytree + abstract/sharded construction."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.transformer import abstract_params, init_params
+from repro.optim.adamw import AdamWConfig, abstract_state, init_state
+
+
+def make_state(cfg: ArchConfig, opt: AdamWConfig, seed: int = 0):
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    return {"params": params, "opt": init_state(params, opt),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def make_abstract_state(cfg: ArchConfig, opt: AdamWConfig):
+    params = abstract_params(cfg)
+    return {"params": params, "opt": abstract_state(params, opt),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def state_shardings(abstract, mesh, cfg: ArchConfig, fsdp: bool = False):
+    """Param shardings + ZeRO-1 optimizer shardings (data-axis extension)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.distributed.sharding import (_extend_fsdp, param_specs_tree)
+
+    pspecs = param_specs_tree(abstract["params"], mesh, cfg, fsdp)
+
+    def opt_spec(path, leaf):
+        # Quantized moment leaves ('q'/'scale') get simple ZeRO row sharding.
+        keys = [str(getattr(p, "key", "")) for p in path]
+        if keys and keys[-1] in ("q", "scale"):
+            spec = P("data" if leaf.shape[0] % mesh.shape["data"] == 0 else None)
+            return NamedSharding(mesh, P(*(list(spec) + [None] * (leaf.ndim - 1))))
+        return None  # filled from param spec below
+
+    def build(pspec_leaf, aleaf):
+        spec = _extend_fsdp(pspec_leaf, aleaf.shape, mesh, "data")
+        return NamedSharding(mesh, spec)
+
+    # moments mirror the param tree structure (possibly with q/scale dicts)
+    def moment_shardings(moments):
+        def rule(path, leaf):
+            s = opt_spec(path, leaf)
+            if s is not None:
+                return s
+            # find matching param spec by path prefix (strip m/v root)
+            sub = pspecs
+            for p in path:
+                k = getattr(p, "key", None)
+                if isinstance(sub, dict) and k in sub:
+                    sub = sub[k]
+            spec = sub if isinstance(sub, P) else P(*([None] * leaf.ndim))
+            return build(spec, leaf)
+
+        return jax.tree_util.tree_map_with_path(rule, moments)
+
+    return {
+        "params": jax.tree.map(
+            lambda s, l: NamedSharding(mesh, s), pspecs, abstract["params"],
+            is_leaf=lambda x: isinstance(x, P)),
+        "opt": {
+            "m": moment_shardings(abstract["opt"]["m"]),
+            "v": moment_shardings(abstract["opt"]["v"]),
+            "count": NamedSharding(mesh, P()),
+        },
+        "step": NamedSharding(mesh, P()),
+    }

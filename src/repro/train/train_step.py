@@ -1,0 +1,75 @@
+"""jit-able train / serve step builders.
+
+train_step: microbatched gradient accumulation (lax.scan), remat policy,
+AdamW update, cosine schedule. serve_* wrap prefill/decode. All builders
+return pure functions ready for jax.jit with explicit in/out shardings.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.model import loss_fn, serve_decode, serve_prefill
+from repro.optim.adamw import AdamWConfig, apply_updates, cosine_schedule
+
+
+def make_train_step(cfg: ArchConfig, opt: AdamWConfig,
+                    microbatches: int = 1, remat: bool = True,
+                    schedule_total: int = 10_000):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def single_grads(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch, cfg, remat)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if microbatches == 1:
+            loss, grads = single_grads(params, batch)
+        else:
+            def reshape(x):
+                b = x.shape[0]
+                assert b % microbatches == 0
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+            mbatch = jax.tree.map(reshape, batch)
+
+            def acc(carry, mb):
+                loss_sum, gacc = carry
+                l, g = single_grads(params, mb)
+                return (loss_sum + l,
+                        jax.tree.map(jnp.add, gacc, g)), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss_sum, gsum), _ = jax.lax.scan(acc, (jnp.float32(0), zero),
+                                               mbatch)
+            loss = loss_sum / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+
+        lr_scale = cosine_schedule(state["step"], total=schedule_total)
+        new_params, new_opt = apply_updates(params, grads, state["opt"], opt,
+                                            lr_scale)
+        metrics = {"loss": loss.astype(jnp.float32),
+                   "lr_scale": jnp.asarray(lr_scale, jnp.float32)}
+        return ({"params": new_params, "opt": new_opt,
+                 "step": state["step"] + 1}, metrics)
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, max_seq: int | None = None):
+    def prefill_step(params, batch):
+        return serve_prefill(params, batch, cfg, max_seq=max_seq)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig):
+    def step(params, cache, batch):
+        return serve_decode(params, cache, batch, cfg)
+
+    return step

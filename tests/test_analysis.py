@@ -1,0 +1,97 @@
+"""Tests for the HLO roofline analyzer and synthetic-data generators."""
+
+import numpy as np
+import pytest
+
+from repro.data.synth import DATASETS, dataset_stats, load_dataset
+from repro.launch.hlo_analysis import (analyze_hlo, region_multipliers,
+                                       split_regions)
+
+_FAKE_HLO = """
+HloModule jit_f, is_scheduled=true
+
+%region_body.1 (arg: (s32[], f32[128,128])) -> (s32[], f32[128,128]) {
+  %p = (s32[], f32[128,128]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[128,128]{1,0} get-tuple-element(%p), index=1
+  %w = f32[128,128]{1,0} constant({...})
+  %d = f32[128,128]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[128,128]{1,0} all-reduce(%d), replica_groups={}
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[128,128]) tuple(%ni, %ar)
+}
+
+%region_cond.2 (arg.1: (s32[], f32[128,128])) -> pred[] {
+  %p.1 = (s32[], f32[128,128]) parameter(0)
+  %i.1 = s32[] get-tuple-element(%p.1), index=0
+  %n = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i.1, %n), direction=LT
+}
+
+ENTRY %main.3 (x.1: f32[128,128]) -> f32[128,128] {
+  %x.2 = f32[128,128]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %t0 = (s32[], f32[128,128]) tuple(%zero, %x.2)
+  %w.5 = (s32[], f32[128,128]{1,0}) while(%t0), condition=%region_cond.2, body=%region_body.1
+  ROOT %out = f32[128,128]{1,0} get-tuple-element(%w.5), index=1
+}
+"""
+
+
+def test_split_regions_finds_all():
+    regs = split_regions(_FAKE_HLO)
+    assert "__entry__" in regs
+    assert "%region_body.1" in regs
+    assert "%region_cond.2" in regs
+
+
+def test_trip_count_multiplier():
+    regs = split_regions(_FAKE_HLO)
+    mult = region_multipliers(regs)
+    assert mult["%region_body.1"] == 7.0
+    assert mult[regs["__entry__"].name] == 1.0
+
+
+def test_dot_flops_scaled_by_trip_count():
+    res = analyze_hlo(_FAKE_HLO)
+    # one 128^3 matmul per iteration, 7 iterations
+    assert res["flops"] == pytest.approx(7 * 2 * 128 ** 3)
+    # the all-reduce result is 128*128*4 bytes, 7 times
+    assert res["collective_bytes"] == pytest.approx(7 * 128 * 128 * 4)
+    assert "all-reduce" in res["collectives"]
+
+
+def test_analyze_empty():
+    res = analyze_hlo("HloModule empty")
+    assert res["flops"] == 0.0
+
+
+# ----------------------------------------------------------------- datasets
+@pytest.mark.parametrize("name", sorted(DATASETS))
+def test_datasets_deterministic_and_sized(name):
+    a = load_dataset(name, 1 << 16)
+    b = load_dataset(name, 1 << 16)
+    assert a == b
+    st = dataset_stats(a)
+    assert st["bytes"] >= (1 << 16)
+    assert 0 < st["avg_len"] < 2000
+
+
+def test_dataset_shapes_match_paper_profile():
+    """Avg lengths roughly track Table 2 (titles ~52B, reviews ~420B...)."""
+    stats = {n: dataset_stats(load_dataset(n, 1 << 18))["avg_len"]
+             for n in DATASETS}
+    assert stats["news_headlines"] < stats["book_titles"] < 70
+    assert stats["book_reviews"] > 250
+    assert 45 < stats["urls"] < 140
+    assert 45 < stats["tweets"] < 120
+
+
+def test_roofline_loader_reads_records():
+    from repro.launch.roofline import load_records
+    recs = load_records("16x16")
+    assert len(recs) >= 30
+    for r in recs[:5]:
+        assert {"t_compute_s", "t_memory_s", "t_collective_s",
+                "bottleneck"} <= set(r)

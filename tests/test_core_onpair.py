@@ -1,0 +1,190 @@
+"""Paper-semantics tests for the core OnPair/OnPair16 implementation:
+invariants from §3 (dictionary bounds, threshold law, LPM behaviour,
+decode layouts) + roundtrip properties for every compressor."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (ALL_COMPRESSORS, BPECompressor, FSSTCompressor,
+                        OnPairConfig, PackedDictionary, auto_threshold,
+                        make_onpair, make_onpair16, train_dictionary)
+from repro.core.lpm import DynamicLPM, lpm_from_entries
+from repro.core.packing import (is_prefix_packed, pack_u64,
+                                shared_prefix_size, unpack_u64)
+from repro.data.synth import load_dataset
+
+
+@pytest.fixture(scope="module")
+def titles():
+    return load_dataset("book_titles", 1 << 19)
+
+
+# ------------------------------------------------------------------ packing
+@given(st.binary(min_size=1, max_size=8))
+@settings(max_examples=200, deadline=None)
+def test_pack_unpack_roundtrip(b):
+    assert unpack_u64(pack_u64(b, 0, len(b)), len(b)) == b
+
+
+@given(st.binary(min_size=0, max_size=8), st.binary(min_size=0, max_size=8))
+@settings(max_examples=200, deadline=None)
+def test_shared_prefix_matches_string_compare(a, b):
+    va, vb = pack_u64(a, 0, len(a)), pack_u64(b, 0, len(b))
+    got = shared_prefix_size(va, vb)
+    true_shared = 0
+    for x, y in zip(a, b):
+        if x != y:
+            break
+        true_shared += 1
+    # packed compare can only over-report past the shorter string's end
+    # (zero padding); Algorithm 2's length check covers that.
+    assert got >= min(true_shared, 8)
+    if true_shared < min(len(a), len(b)):
+        assert got == true_shared
+
+
+@given(st.binary(min_size=1, max_size=8), st.binary(min_size=1, max_size=8))
+@settings(max_examples=200, deadline=None)
+def test_is_prefix_packed_semantics(s, p):
+    got = is_prefix_packed(pack_u64(s, 0, len(s)), len(s),
+                           pack_u64(p, 0, len(p)), len(p))
+    assert got == s.startswith(p)
+
+
+# ---------------------------------------------------------------- threshold
+def test_auto_threshold_law():
+    # threshold = max(2, floor(log2(S_MiB)))  (§3.2.1)
+    assert auto_threshold(1 << 19) == 2          # 0.5 MiB
+    assert auto_threshold(4 << 20) == 2          # 4 MiB
+    assert auto_threshold(220 << 20) == 7        # Book Titles, 220 MiB
+    assert auto_threshold(1846 << 20) == 10      # URLs, 1.8 GiB
+
+
+# ------------------------------------------------------------------ LPM
+def test_lpm_greedy_longest_match(titles):
+    lpm = DynamicLPM()
+    for tid, e in enumerate([bytes([b]) for b in range(256)]):
+        lpm.insert(e, tid)
+    lpm.insert(b"abcd", 300)
+    lpm.insert(b"abcdefghij", 301)   # long pattern (> 8 bytes)
+    lpm.insert(b"abcdefgh", 302)
+    tid, L = lpm.search(b"abcdefghijklm", 0)
+    assert (tid, L) == (301, 10)     # longest wins (long tier)
+    tid, L = lpm.search(b"abcdefgX", 0)
+    assert (tid, L) == (300, 4)      # falls back through short tier
+    tid, L = lpm.search(b"zzz", 0)
+    assert (tid, L) == (ord("z"), 1)  # single byte guaranteed
+
+
+def test_bucket_descending_order(titles):
+    lpm = DynamicLPM()
+    lpm.insert(b"prefix12" + b"a" * 3, 1)
+    lpm.insert(b"prefix12" + b"a" * 6, 2)
+    lpm.insert(b"prefix12" + b"a" * 1, 3)
+    bucket = lpm.long_buckets[pack_u64(b"prefix12", 0, 8)]
+    lens = [len(s) for s, _ in bucket]
+    assert lens == sorted(lens, reverse=True)
+
+
+# ----------------------------------------------------------- training phase
+def test_dictionary_bounds_onpair16(titles):
+    cfg = OnPairConfig.onpair16(sample_bytes=1 << 19)
+    res = train_dictionary(titles, cfg)
+    assert len(res.entries) <= 65536
+    assert all(len(e) <= 16 for e in res.entries)          # 16-byte bound
+    d = PackedDictionary.build(res.entries)
+    assert d.max_bucket_size <= 128                         # bucket bound
+    assert d.total_bytes <= (1 << 20) + (1 << 18)           # <= 1.25 MiB
+    assert res.entries[:256] == [bytes([b]) for b in range(256)]
+
+
+def test_dict_grows_more_with_lower_threshold(titles):
+    low = train_dictionary(titles, OnPairConfig.onpair16(
+        threshold=2, sample_bytes=1 << 18))
+    high = train_dictionary(titles, OnPairConfig.onpair16(
+        threshold=12, sample_bytes=1 << 18))
+    assert len(low.entries) > len(high.entries)             # Fig. 2 behaviour
+
+
+def test_training_deterministic(titles):
+    a = train_dictionary(titles, OnPairConfig.onpair16(seed=5, sample_bytes=1 << 18))
+    b = train_dictionary(titles, OnPairConfig.onpair16(seed=5, sample_bytes=1 << 18))
+    assert a.entries == b.entries
+
+
+# ------------------------------------------------------------ roundtrips
+@pytest.mark.parametrize("name", ["raw", "zlib-block", "zstd-block", "fsst",
+                                  "onpair", "onpair16"])
+def test_roundtrip_all_compressors(titles, name):
+    strings = titles[:4000]
+    c = ALL_COMPRESSORS[name]()
+    c.train(strings, sum(map(len, strings)))
+    corpus = c.compress(strings)
+    assert c.decompress_all(corpus) == b"".join(strings)
+    rng = np.random.default_rng(0)
+    for i in rng.integers(0, len(strings), 25):
+        assert c.access(corpus, int(i)) == strings[int(i)]
+
+
+def test_bpe_roundtrip_small(titles):
+    strings = titles[:1500]
+    c = BPECompressor(sample_bytes=1 << 17)
+    c.train(strings)
+    corpus = c.compress(strings)
+    assert c.decompress_all(corpus) == b"".join(strings)
+    assert c.access(corpus, 3) == strings[3]
+
+
+@given(st.lists(st.binary(min_size=0, max_size=100), min_size=1, max_size=20))
+@settings(max_examples=25, deadline=None)
+def test_property_onpair16_roundtrip_arbitrary(strings):
+    c = make_onpair16(sample_bytes=1 << 16)
+    c.train(strings or [b"x"])
+    corpus = c.compress(strings)
+    assert c.decompress_all(corpus) == b"".join(strings)
+    for i in range(len(strings)):
+        assert c.access(corpus, i) == strings[i]
+
+
+@given(st.lists(st.binary(min_size=0, max_size=80), min_size=1, max_size=10))
+@settings(max_examples=20, deadline=None)
+def test_property_fsst_roundtrip_arbitrary(strings):
+    c = FSSTCompressor(sample_bytes=1 << 14)
+    c.train(strings)
+    corpus = c.compress(strings)
+    assert c.decompress_all(corpus) == b"".join(strings)
+
+
+# ----------------------------------------------------------- decode layout
+def test_decode_tokens_matches_entries(titles):
+    c = make_onpair16(sample_bytes=1 << 18)
+    c.train(titles)
+    d = c.dictionary
+    rng = np.random.default_rng(1)
+    toks = rng.integers(0, d.num_entries, 500)
+    expect = b"".join(d.entries[t] for t in toks)
+    assert d.decode_tokens(toks) == expect
+
+
+def test_offsets_encode_lengths(titles):
+    c = make_onpair(sample_bytes=1 << 18)
+    c.train(titles)
+    d = c.dictionary
+    # Figure 7: entry i lives at blob[offsets[i]:offsets[i+1]]
+    for tid in [0, 17, 256, d.num_entries - 1]:
+        o0, o1 = int(d.offsets[tid]), int(d.offsets[tid + 1])
+        assert bytes(d.blob[o0:o1]) == d.entries[tid]
+
+
+def test_paper_claim_ratio_ordering(titles):
+    """Core claim (Table 3): OnPair ratio > OnPair16 ratio >> FSST ratio."""
+    strings = titles
+    rs = {}
+    for name in ("onpair", "onpair16", "fsst"):
+        c = ALL_COMPRESSORS[name]()
+        c.train(strings, sum(map(len, strings)))
+        rs[name] = c.compress(strings[:3000]).ratio
+    assert rs["onpair"] >= rs["onpair16"] * 0.98
+    assert rs["onpair16"] > rs["fsst"] * 1.1

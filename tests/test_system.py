@@ -1,0 +1,273 @@
+"""End-to-end system tests: training loop + fault tolerance + checkpoint
+elasticity + optimizer + data pipeline + gradient compression."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt as ckpt_lib
+from repro.configs import REGISTRY
+from repro.data.corpus import CompressedCorpusStore
+from repro.data.pipeline import BatchSpec, TokenPipeline
+from repro.data.synth import load_dataset
+from repro.models.model import build_params, demo_batch
+from repro.optim.adamw import (AdamWConfig, apply_updates, cosine_schedule,
+                               dequantize_q8, init_state, quantize_q8)
+from repro.runtime.loop import LoopConfig, TrainLoop
+from repro.train.train_step import make_train_step
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = REGISTRY["h2o-danube-1.8b"].smoke()
+    params = build_params(cfg, seed=0)
+    return cfg, params
+
+
+# ----------------------------------------------------------------- optimizer
+def test_quantize_roundtrip():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1000,)) * 0.01, jnp.float32)
+    q = quantize_q8(x)
+    back = dequantize_q8(q, x.shape)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x),
+                               atol=float(jnp.max(jnp.abs(x))) / 100)
+
+
+def test_adamw_reduces_loss(tiny):
+    cfg, params = tiny
+    opt = AdamWConfig(lr=1e-2)
+    step = jax.jit(make_train_step(cfg, opt, schedule_total=100))
+    state = {"params": params, "opt": init_state(params, opt),
+             "step": jnp.zeros((), jnp.int32)}
+    batch = demo_batch(cfg, batch=2, seq=32, kind="train")
+    losses = []
+    for _ in range(5):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+
+
+def test_adamw_quantized_close_to_exact(tiny):
+    cfg, params = tiny
+    batch = demo_batch(cfg, batch=2, seq=16, kind="train")
+    from repro.models.model import loss_fn
+    grads = jax.grad(loss_fn)(params, batch, cfg)
+    outs = {}
+    for quant in (False, True):
+        opt = AdamWConfig(lr=1e-3, quantized_moments=quant)
+        st = init_state(params, opt)
+        newp, _ = apply_updates(params, grads, st, opt)
+        outs[quant] = newp
+    a = jax.tree.leaves(outs[False])[5].astype(jnp.float32)
+    b = jax.tree.leaves(outs[True])[5].astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3)
+
+
+def test_cosine_schedule_shape():
+    assert float(cosine_schedule(jnp.int32(0), warmup=10, total=100)) == 0.0
+    assert abs(float(cosine_schedule(jnp.int32(10), warmup=10, total=100)) - 1.0) < 1e-6
+    end = float(cosine_schedule(jnp.int32(100), warmup=10, total=100))
+    assert 0.09 < end < 0.11
+
+
+# ---------------------------------------------------------------- checkpoint
+def test_checkpoint_atomic_roundtrip(tiny, tmp_path):
+    cfg, params = tiny
+    opt = AdamWConfig()
+    state = {"params": params, "opt": init_state(params, opt),
+             "step": jnp.int32(7)}
+    d = str(tmp_path / "ck")
+    ckpt_lib.save(state, 7, d)
+    assert ckpt_lib.latest_step(d) == 7
+    abstract = jax.eval_shape(lambda: state)
+    restored, step = ckpt_lib.restore(d, abstract)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_elastic_reshard(tiny, tmp_path):
+    """Save unsharded, restore onto a mesh with NamedShardings (the elastic
+    path: any checkpoint onto any mesh)."""
+    cfg, params = tiny
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    state = {"params": params, "step": jnp.int32(3)}
+    d = str(tmp_path / "ck2")
+    ckpt_lib.save(state, 3, d)
+    abstract = jax.eval_shape(lambda: state)
+    sh = jax.tree.map(lambda l: NamedSharding(mesh, P()), abstract)
+    restored, _ = ckpt_lib.restore(d, abstract, shardings=sh)
+    leaf = jax.tree.leaves(restored)[0]
+    assert isinstance(leaf.sharding, NamedSharding)
+
+
+def test_checkpoint_detects_tree_mismatch(tmp_path):
+    d = str(tmp_path / "ckm")
+    ckpt_lib.save({"x": jnp.int32(1)}, 1, d)
+    with pytest.raises(ValueError, match="mismatch"):
+        ckpt_lib.restore(d, jax.eval_shape(lambda: {"y": jnp.int32(0)}))
+
+
+def test_checkpoint_gc(tmp_path):
+    d = str(tmp_path / "ck3")
+    for s in (1, 2, 3, 4):
+        ckpt_lib.save({"x": jnp.int32(s)}, s, d)
+    removed = ckpt_lib.gc(d, keep=2)
+    assert len(removed) == 2
+    assert ckpt_lib.latest_step(d) == 4
+
+
+def test_checkpoint_tmp_dir_ignored(tmp_path):
+    d = str(tmp_path / "ck4")
+    ckpt_lib.save({"x": jnp.int32(1)}, 1, d)
+    os.makedirs(os.path.join(d, "step_00000009.tmp"))  # simulated dead writer
+    assert ckpt_lib.latest_step(d) == 1
+
+
+# --------------------------------------------------------------- train loop
+def test_train_loop_with_resume(tiny, tmp_path):
+    cfg, _ = tiny
+    opt = AdamWConfig(lr=1e-3)
+    step_fn = jax.jit(make_train_step(cfg, opt))
+
+    def batch_fn(step):
+        return demo_batch(cfg, batch=2, seq=16, kind="train", seed=step)
+
+    def fresh_state():
+        p = build_params(cfg, seed=0)
+        return {"params": p, "opt": init_state(p, opt),
+                "step": jnp.zeros((), jnp.int32)}
+
+    lc = LoopConfig(total_steps=6, ckpt_every=3, ckpt_dir=str(tmp_path / "loop"),
+                    log_every=100)
+    loop = TrainLoop(step_fn, fresh_state(), batch_fn, lc,
+                     install_signals=False)
+    stats = loop.run(log=lambda *_: None)
+    assert stats.steps_run == 6
+    assert ckpt_lib.latest_step(lc.ckpt_dir) == 6
+
+    # crash + restart: a new loop resumes from the committed checkpoint
+    lc2 = LoopConfig(total_steps=9, ckpt_every=3, ckpt_dir=lc.ckpt_dir,
+                     log_every=100)
+    abstract = jax.eval_shape(fresh_state)
+    loop2 = TrainLoop(step_fn, fresh_state(), batch_fn, lc2,
+                      abstract_state=abstract, install_signals=False)
+    stats2 = loop2.run(log=lambda *_: None)
+    assert stats2.resumed_from == 6
+    assert stats2.steps_run == 3  # only the remaining steps
+
+
+def test_preemption_saves_and_exits(tiny, tmp_path):
+    cfg, params = tiny
+    opt = AdamWConfig(lr=1e-3)
+    step_fn = jax.jit(make_train_step(cfg, opt))
+    state = {"params": params, "opt": init_state(params, opt),
+             "step": jnp.zeros((), jnp.int32)}
+    lc = LoopConfig(total_steps=50, ckpt_every=100,
+                    ckpt_dir=str(tmp_path / "pre"), log_every=1000)
+    loop = TrainLoop(step_fn, state,
+                     lambda s: demo_batch(cfg, 2, 16, "train", s),
+                     lc, install_signals=False)
+    orig = loop.train_step
+
+    def step_then_preempt(st, b):
+        out = orig(st, b)
+        if int(np.asarray(out[0]["step"])) >= 2:
+            loop._on_preempt(None, None)  # simulated SIGTERM
+        return out
+
+    loop.train_step = step_then_preempt
+    stats = loop.run(log=lambda *_: None)
+    assert stats.preempted
+    assert stats.steps_run < 50
+    assert ckpt_lib.latest_step(lc.ckpt_dir) is not None
+
+
+def test_straggler_watchdog_counts(tiny, tmp_path):
+    cfg, params = tiny
+    opt = AdamWConfig(lr=1e-3)
+    base = jax.jit(make_train_step(cfg, opt))
+    state = {"params": params, "opt": init_state(params, opt),
+             "step": jnp.zeros((), jnp.int32)}
+    import time as _t
+    calls = {"n": 0}
+
+    def slow_every_5(st, b):
+        calls["n"] += 1
+        if calls["n"] == 8:
+            _t.sleep(1.0)  # injected straggler
+        return base(st, b)
+
+    lc = LoopConfig(total_steps=10, ckpt_every=1000,
+                    ckpt_dir=str(tmp_path / "wd"), log_every=1000,
+                    straggler_factor=3.0)
+    loop = TrainLoop(slow_every_5, state,
+                     lambda s: demo_batch(cfg, 2, 16, "train", s % 3),
+                     lc, install_signals=False)
+    stats = loop.run(log=lambda *_: None)
+    assert stats.straggler_steps >= 1
+
+
+# ------------------------------------------------------------ grad compress
+def test_compressed_pmean_single_axis():
+    from repro.distributed.compress import (compressed_pmean,
+                                            init_error_feedback)
+    from repro.distributed.sharding import use_mesh
+    mesh = jax.make_mesh((1,), ("pod",))
+    tree = {"a": jnp.asarray(np.random.default_rng(0).normal(size=(64, 64)),
+                             jnp.float32)}
+    ef = init_error_feedback(tree)
+    with use_mesh(mesh):
+        mean, new_ef = compressed_pmean(tree, ef, mesh, axis="pod")
+    err = np.abs(np.asarray(mean["a"]) - np.asarray(tree["a"])).max()
+    scale = float(jnp.abs(tree["a"]).max()) / 127.0
+    assert err <= scale * 1.01  # quantisation bound
+    np.testing.assert_allclose(np.asarray(new_ef["a"]),
+                               np.asarray(tree["a"] - mean["a"]), atol=1e-6)
+
+
+# ------------------------------------------------------------- data plane
+def test_corpus_store_and_pipeline_resume():
+    strings = load_dataset("news_headlines", 1 << 18)
+    store = CompressedCorpusStore.build(strings, sample_bytes=1 << 18)
+    assert store.compression_ratio > 2.0
+    spec = BatchSpec(global_batch=4, seq_len=64, seed=9)
+    pipe = TokenPipeline(store, spec)
+    b5 = pipe.batch(5)
+    pipe2 = TokenPipeline(store, spec)  # fresh process after restart
+    np.testing.assert_array_equal(b5["tokens"], pipe2.batch(5)["tokens"])
+
+
+def test_microbatched_train_step_matches_single(tiny):
+    cfg, params = tiny
+    opt = AdamWConfig(lr=0.0, weight_decay=0.0)
+    s1 = make_train_step(cfg, opt, microbatches=1)
+    s2 = make_train_step(cfg, opt, microbatches=2)
+    state = {"params": params, "opt": init_state(params, opt),
+             "step": jnp.zeros((), jnp.int32)}
+    batch = demo_batch(cfg, batch=4, seq=16, kind="train")
+    _, m1 = s1(state, batch)
+    _, m2 = s2(state, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=1e-3)
+
+
+# ------------------------------------------------------ sharding unit rules
+def test_param_specs_shapes_match():
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import param_specs_tree
+    cfg = REGISTRY["yi-9b"]
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    from repro.models.transformer import abstract_params
+    ap = abstract_params(cfg)
+    specs = param_specs_tree(ap, mesh, cfg, fsdp=True)
+    flat_p = jax.tree_util.tree_leaves(ap)
+    flat_s = jax.tree_util.tree_leaves(specs,
+                                       is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_p) == len(flat_s)
+    for p, s in zip(flat_p, flat_s):
+        assert len(s) <= len(p.shape)
