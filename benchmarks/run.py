@@ -124,6 +124,19 @@ def bench_kernels(size_mib: int) -> None:
           f"mib_s={bb / (1 << 20) / dt:.2f}")
 
 
+def bench_store(size_mib: int) -> None:
+    """repro.store serving path: batched multiget vs naive access loop."""
+    from benchmarks.store_bench import store_multiget_bench
+    rows = store_multiget_bench(size_mib)
+    _dump("store", rows)
+    for r in rows:
+        us = r["total_s"] / max(1, r["n_queries"]) * 1e6
+        _emit(f"store/{r['variant']}/{r['backend']}", us,
+              f"lookups_s={r['lookups_per_s']};mib_s={r['mib_s']};"
+              f"p50_us={r['p50_us']};p99_us={r['p99_us']};"
+              f"per={r['latency_per']}")
+
+
 def bench_roofline(_size_mib: int) -> None:
     """Surface the dry-run roofline summary as bench rows."""
     from repro.launch.roofline import fmt_row, load_records
@@ -146,6 +159,7 @@ ALL = {
     "table5": bench_table5,
     "figures": bench_figures,
     "kernels": bench_kernels,
+    "store": bench_store,
     "roofline": bench_roofline,
 }
 

@@ -1,0 +1,81 @@
+"""Store serving benchmark: batched multiget vs the naive per-string loop.
+
+Measures, over uniform random ids on one dataset:
+
+* ``naive``      — per-string ``OnPairCompressor.access`` loop (the paper's
+                   random-access microbenchmark, one string per call);
+* ``store-*``    — ``CompressedStringStore.multiget`` in serving-sized
+                   batches through each available backend (cache disabled so
+                   the decode path is what's timed).
+
+Emits the harness JSON schema (list of row dicts under results/bench) with
+throughput (lookups/s, MiB/s) and p50/p99 latency per batch from
+``repro.core.metrics.latency_summary``.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import dataset
+from repro.core.metrics import latency_summary, throughput_mib_s
+from repro.store import CompressedStringStore
+
+
+def _time_batches(fn, batches) -> list[float]:
+    out = []
+    for b in batches:
+        t0 = time.perf_counter()
+        fn(b)
+        out.append(time.perf_counter() - t0)
+    return out
+
+
+def store_multiget_bench(size_mib: int, n_queries: int = 20000,
+                         batch: int = 1024, seed: int = 0,
+                         dataset_name: str = "book_titles") -> list[dict]:
+    strings = dataset(dataset_name, size_mib << 20)
+    rng = np.random.default_rng(seed)
+    ids = rng.integers(0, len(strings), n_queries).tolist()
+    raw_bytes = sum(len(strings[i]) for i in ids)
+    batches = [ids[k : k + batch] for k in range(0, len(ids), batch)]
+    rows: list[dict] = []
+
+    def row(variant: str, backend: str, lat_s: list[float], per: str) -> dict:
+        total = sum(lat_s)
+        lat = latency_summary(lat_s)
+        return {
+            "dataset": dataset_name, "variant": variant, "backend": backend,
+            "n_queries": n_queries, "batch": batch,
+            "latency_per": per,
+            "p50_us": round(lat["p50_us"], 2),
+            "p99_us": round(lat["p99_us"], 2),
+            "lookups_per_s": round(n_queries / total, 1),
+            "mib_s": round(throughput_mib_s(raw_bytes, total), 2),
+            "total_s": round(total, 4),
+        }
+
+    for variant16 in (True, False):
+        variant = "onpair16" if variant16 else "onpair"
+        store = CompressedStringStore.build(
+            strings, variant16=variant16, sample_bytes=min(size_mib, 4) << 20,
+            seed=seed, cache_bytes=0)
+        comp, corpus = store.compressor, store.corpus
+
+        # naive loop: one access() per id (per-call latency samples)
+        lat = _time_batches(lambda b: [comp.access(corpus, i) for i in b],
+                            [[i] for i in ids])
+        rows.append(row(f"{variant}/naive-access", "numpy", lat, "lookup"))
+
+        backends = ["numpy"] + (["jax"] if store.backend == "jax" else [])
+        for backend in backends:
+            s = CompressedStringStore(comp, corpus, cache_bytes=0,
+                                      backend=backend)
+            s.multiget(ids[:batch])  # warmup: trigger jit compiles
+            lat = _time_batches(s.multiget, batches)
+            r = row(f"{variant}/store-multiget", backend, lat, "batch")
+            r["jit_shapes"] = [list(x) for x in sorted(s.stats.jit_shapes)]
+            rows.append(r)
+    return rows

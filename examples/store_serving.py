@@ -1,0 +1,70 @@
+"""Example: serving point lookups from the compressed string store.
+
+1. Train OnPair16 and open a CompressedStringStore over the corpus
+   (compressed payload + segments + LRU cache + Pallas batch decoder).
+2. Batched multiget — note the bounded set of jit-compiled decode shapes.
+3. Range scan — one vectorised decode per touched segment.
+4. StoreService — concurrent clients coalesced into micro-batches.
+
+  PYTHONPATH=src python examples/store_serving.py
+"""
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import threading
+import time
+
+import numpy as np
+
+from repro.data.synth import load_dataset
+from repro.store import CompressedStringStore, StoreService
+
+strings = load_dataset("urls", 2 << 20)
+store = CompressedStringStore.build(strings, sample_bytes=2 << 20,
+                                    strings_per_segment=4096)
+print(f"store: {len(store)} strings, {store.segments.n_segments} segments, "
+      f"{store.backend} backend, bucket caps {[int(c) for c in store.bucket_caps]}, "
+      f"{store.memory_bytes / (1 << 20):.2f} MiB resident")
+
+# --- batched point lookups (the paper's random-access workload, batched) ----
+rng = np.random.default_rng(0)
+ids = rng.integers(0, len(store), 2000).tolist()
+t0 = time.perf_counter()
+out = store.multiget(ids)
+dt = time.perf_counter() - t0
+assert out == [strings[i] for i in ids]
+print(f"multiget: {len(ids)} lookups in {dt * 1e3:.1f} ms "
+      f"({len(ids) / dt:.0f} lookups/s), "
+      f"jit decode shapes: {sorted(store.stats.jit_shapes)}")
+
+# --- range scan -------------------------------------------------------------
+t0 = time.perf_counter()
+docs = store.scan(1000, 3000)
+assert docs == strings[1000:3000]
+print(f"scan[1000:3000): {len(docs)} strings in "
+      f"{(time.perf_counter() - t0) * 1e3:.1f} ms")
+
+# --- micro-batching service: concurrent clients, coalesced decodes ----------
+with StoreService(store, max_batch=256, max_wait_s=0.002) as svc:
+    def client(seed: int) -> None:
+        r = np.random.default_rng(seed)
+        for i in r.integers(0, len(store), 200):
+            assert svc.get(int(i)) == strings[int(i)]
+
+    threads = [threading.Thread(target=client, args=(s,)) for s in range(4)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    dt = time.perf_counter() - t0
+    st = svc.stats()
+    print(f"service: {st['requests']} requests from 4 clients in "
+          f"{dt * 1e3:.0f} ms, {st['batches']} batches "
+          f"(avg {st['avg_batch']} lookups/batch), "
+          f"p99 {st['request_latency']['p99_us']:.0f} us")
+
+snap = store.stats_snapshot()
+print(f"totals: {snap['lookups']} lookups, cache hit rate "
+      f"{snap['cache']['hit_rate']:.2f}, decode {snap['decode_mib_s']} MiB/s")

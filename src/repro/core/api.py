@@ -42,6 +42,18 @@ class CompressedCorpus:
     def string_payload(self, i: int) -> bytes:
         return self.payload[int(self.offsets[i]) : int(self.offsets[i + 1])].tobytes()
 
+    # Token-stream accessors: valid for compressors whose payload is a stream
+    # of 2-byte token IDs (onpair / onpair16 / bpe), where every per-string
+    # compressed slice has even length.
+    def string_tokens(self, i: int) -> np.ndarray:
+        """u16 token IDs of string ``i`` — a zero-copy view of the payload."""
+        o0, o1 = int(self.offsets[i]), int(self.offsets[i + 1])
+        return self.payload[o0:o1].view("<u2")
+
+    def token_counts(self) -> np.ndarray:
+        """Tokens per string, i64[n_strings] (2 bytes per token ID)."""
+        return ((self.offsets[1:] - self.offsets[:-1]) // 2).astype(np.int64)
+
 
 @dataclass
 class TrainStats:

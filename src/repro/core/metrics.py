@@ -59,6 +59,50 @@ def avg_token_length(dictionary: PackedDictionary, tokens: np.ndarray) -> float:
     return float(dictionary.lens[np.asarray(tokens, dtype=np.int64)].mean())
 
 
+# --------------------------------------------------------- serving metrics
+def latency_summary(samples_s, percentiles=(50.0, 99.0)) -> dict[str, float]:
+    """Summarise a latency sample set (seconds) into mean/percentile stats.
+
+    Shared by the store/serving layer (repro.store.stats) and the benchmark
+    harness so every surface reports the same p50/p99 definition
+    (linear-interpolated percentiles over the observed samples).
+    """
+    arr = np.asarray(list(samples_s), dtype=np.float64)
+    if arr.size == 0:
+        out = {f"p{p:g}_us": 0.0 for p in percentiles}
+        out.update(count=0, mean_us=0.0)
+        return out
+    out = {f"p{p:g}_us": float(np.percentile(arr, p)) * 1e6
+           for p in percentiles}
+    out.update(count=int(arr.size), mean_us=float(arr.mean()) * 1e6)
+    return out
+
+
+def throughput_mib_s(nbytes: int, seconds: float) -> float:
+    return nbytes / float(1 << 20) / max(seconds, 1e-12)
+
+
+class LatencyReservoir:
+    """Bounded latency sample store: append until full, then overwrite the
+    oldest (ring). One policy shared by every serving-layer recorder so the
+    bound and summary definition cannot drift between surfaces."""
+
+    def __init__(self, max_samples: int = 65536):
+        self.max_samples = int(max_samples)
+        self._samples: list[float] = []
+        self._pos = 0
+
+    def record(self, seconds: float) -> None:
+        if len(self._samples) < self.max_samples:
+            self._samples.append(seconds)
+        else:
+            self._samples[self._pos % self.max_samples] = seconds
+            self._pos += 1
+
+    def summary(self, percentiles=(50.0, 99.0)) -> dict[str, float]:
+        return latency_summary(self._samples, percentiles)
+
+
 def cumulative_coverage(dictionary: PackedDictionary, tokens: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
     """(dictionary bytes, cumulative token coverage) sorted by frequency desc
     (paper Fig. 10): how much of the compressed stream is served by the top-k

@@ -218,11 +218,10 @@ class OnPairCompressor(StringCompressor):
         return self.dictionary.decode_tokens(np.asarray(tokens))
 
     def access(self, corpus: CompressedCorpus, i: int) -> bytes:
+        """Random access: one string's token slice through the vectorised
+        Algorithm 3 decoder (no per-token Python loop)."""
         assert self.dictionary is not None
-        o0, o1 = int(corpus.offsets[i]), int(corpus.offsets[i + 1])
-        tokens = corpus.payload[o0:o1].view("<u2")
-        entries = self.dictionary.entries
-        return b"".join(entries[t] for t in tokens)
+        return self.dictionary.decode_tokens(corpus.string_tokens(i))
 
 
 def make_onpair(sample_bytes: int = 8 << 20, seed: int = 0,

@@ -49,8 +49,7 @@ class CompressedCorpusStore:
 
     def doc_tokens(self, i: int) -> np.ndarray:
         """Token IDs of document ``i`` — a pure slice of the stored payload."""
-        o0, o1 = int(self.corpus.offsets[i]), int(self.corpus.offsets[i + 1])
-        return np.asarray(self.corpus.payload[o0:o1].view("<u2"), dtype=np.int32)
+        return np.asarray(self.corpus.string_tokens(i), dtype=np.int32)
 
     def doc_bytes(self, i: int) -> bytes:
         """Random-access decode of document ``i`` (the paper's point query)."""

@@ -30,8 +30,12 @@ from repro.models.config import ArchConfig, ShapeConfig
 def use_mesh(mesh: Mesh):
     """Enter mesh context + enable model-code sharding constraints."""
     _layers.set_mesh_context(mesh)
+    # jax.sharding.set_mesh only exists on newer jax; Mesh itself is a
+    # context manager (axis-name scope) on every version we support.
+    set_mesh = getattr(jax.sharding, "set_mesh", None)
+    ctx = set_mesh(mesh) if set_mesh is not None else mesh
     try:
-        with jax.sharding.set_mesh(mesh):
+        with ctx:
             yield mesh
     finally:
         _layers.set_mesh_context(None)

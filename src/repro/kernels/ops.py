@@ -34,6 +34,31 @@ def pack_strings(strings: list[bytes], pad_len: int | None = None,
     return data, lens
 
 
+def pack_token_matrix(token_lists: list[np.ndarray], pad_tokens: int | None = None,
+                      pad_batch: int | None = None) -> tuple[np.ndarray, np.ndarray]:
+    """Ragged token streams -> padded (tokens int32[B, T], n_tokens int32[B]).
+
+    The multiget assembly step: ``pad_tokens``/``pad_batch`` pin T and B so a
+    serving layer can keep the set of jit-compiled decode shapes small and
+    static (length-bucketed batches). Padding rows/tails are zeros with
+    n_tokens masking them out.
+    """
+    B = pad_batch if pad_batch is not None else len(token_lists)
+    if B < len(token_lists):
+        raise ValueError(f"pad_batch={B} < batch of {len(token_lists)}")
+    T = pad_tokens if pad_tokens is not None else max(
+        (len(t) for t in token_lists), default=1)
+    T = max(T, 1)
+    tokens = np.zeros((B, T), dtype=np.int32)
+    n_tokens = np.zeros(B, dtype=np.int32)
+    for i, t in enumerate(token_lists):
+        if len(t) > T:
+            raise ValueError(f"stream {i} has {len(t)} tokens > pad_tokens={T}")
+        tokens[i, : len(t)] = t
+        n_tokens[i] = len(t)
+    return tokens, n_tokens
+
+
 class OnPairDevice:
     """Device-side OnPair16 codec over a trained PackedDictionary."""
 
@@ -102,6 +127,21 @@ class OnPairDevice:
         olen = np.asarray(olen)
         return [out[i, : olen[i]].astype(np.uint8).tobytes()
                 for i in range(out.shape[0])]
+
+    def multiget_decode(self, token_lists: list[np.ndarray],
+                        pad_tokens: int | None = None,
+                        pad_batch: int | None = None,
+                        use_pallas: bool = True) -> list[bytes]:
+        """Batched random-access decode of ragged token streams.
+
+        Assembles the padded (B, T) matrix (see :func:`pack_token_matrix`)
+        and runs the per-string decode kernel once; max_out = 16 * T is exact
+        for OnPair16 (every entry <= 16 B). Returns only the real rows.
+        """
+        tokens, n_tokens = pack_token_matrix(token_lists, pad_tokens, pad_batch)
+        max_out = 16 * tokens.shape[1]
+        out = self.decode_batch(tokens, n_tokens, max_out, use_pallas=use_pallas)
+        return out[: len(token_lists)]
 
     def roundtrip(self, strings: list[bytes], use_pallas: bool = True) -> list[bytes]:
         toks, n = self.encode_batch(strings, use_pallas=use_pallas)

@@ -1,8 +1,14 @@
 """Serving launcher: batched prefill + decode with on-device OnPair
 detokenisation (the paper's decompression path in the serving loop).
 
+Prompts can come from the CLI or straight out of the compressed corpus
+store (``--doc-ids``): the corpus lives in memory compressed, and prompt
+materialisation is a batched store multiget through the Pallas decoder.
+
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-780m --smoke \
       --prompts "the quick" "compression" --max-new 16
+  PYTHONPATH=src python -m repro.launch.serve --arch mamba2-780m --smoke \
+      --doc-ids 3 17 4242 --max-new 8
 """
 
 from __future__ import annotations
@@ -26,6 +32,9 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--prompts", nargs="+",
                     default=["the quick brown", "in memory database"])
+    ap.add_argument("--doc-ids", type=int, nargs="*", default=None,
+                    help="additionally serve prompts fetched by id from the "
+                         "OnPair-compressed corpus store (repro.store)")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=128)
     args = ap.parse_args()
@@ -35,13 +44,29 @@ def main() -> None:
         cfg = cfg.smoke()
 
     # OnPair tokenizer trained on a small corpus (vocab == dictionary)
-    tok = OnPairTokenizer.train(load_dataset("book_titles", 1 << 20),
-                                sample_bytes=1 << 20)
+    corpus_strings = load_dataset("book_titles", 1 << 20)
+    tok = OnPairTokenizer.train(corpus_strings, sample_bytes=1 << 20)
     from dataclasses import replace
     cfg = replace(cfg, vocab_size=tok.vocab_size)
     params = build_params(cfg, seed=0)
 
-    ids = tok.encode_batch([p.encode() for p in args.prompts], bos=True)
+    prompt_bytes = [p.encode() for p in args.prompts]
+    if args.doc_ids:
+        # corpus path: the store answers the prompt fetch as one batched,
+        # length-bucketed kernel decode over the compressed payload
+        from repro.store import CompressedStringStore
+        store = CompressedStringStore(
+            tok.compressor, tok.compressor.compress(corpus_strings))
+        docs = store.multiget(args.doc_ids)
+        prompt_bytes += docs
+        # display names only; latin-1 roundtrips arbitrary doc bytes
+        args.prompts = list(args.prompts) + [d.decode("latin-1") for d in docs]
+        snap = store.stats_snapshot()
+        print(f"store: {snap['n_strings']} docs in {snap['n_segments']} "
+              f"segments ({snap['backend']} backend), fetched "
+              f"{len(docs)} prompts, jit shapes {snap['jit_shapes']}")
+
+    ids = tok.encode_batch(prompt_bytes, bos=True)
     L = max(len(s) for s in ids)
     tokens = np.zeros((len(ids), L), np.int32)
     for i, s in enumerate(ids):

@@ -1,0 +1,21 @@
+"""repro.store — the batched random-access serving subsystem.
+
+Layered between the compression algorithms (repro.core) / device kernels
+(repro.kernels) and the launchers (repro.launch):
+
+  segment  — multi-segment corpus layout + global->(segment, local) routing
+  cache    — byte-budgeted LRU over decoded strings
+  store    — CompressedStringStore: get / multiget / scan with
+             length-bucketed static-shape Pallas decode (numpy fallback)
+  service  — micro-batching request queue coalescing point lookups
+  stats    — serving counters surfaced through repro.core.metrics
+"""
+
+from repro.store.cache import LRUCache
+from repro.store.segment import Segment, SegmentedCorpus
+from repro.store.service import StoreService
+from repro.store.stats import StoreStats
+from repro.store.store import CompressedStringStore
+
+__all__ = ["CompressedStringStore", "LRUCache", "Segment", "SegmentedCorpus",
+           "StoreService", "StoreStats"]

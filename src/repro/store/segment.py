@@ -1,0 +1,112 @@
+"""Multi-segment layout for a compressed corpus.
+
+A :class:`SegmentedCorpus` splits one :class:`~repro.core.api.CompressedCorpus`
+into fixed-size segments of consecutive strings. Each segment carries a
+zero-copy payload view plus *segment-local* byte offsets, and global string
+ids route as ``gid -> (segment, local)``. Segments are the store's unit of
+scan decoding today and the unit of sharding/replication for a future
+distributed store (see ROADMAP: sharded segments over ``repro.distributed``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.api import CompressedCorpus
+
+
+@dataclass
+class Segment:
+    """A contiguous run of compressed strings with local offsets."""
+
+    index: int
+    base_id: int              # global id of local string 0
+    payload: np.ndarray       # u8 view into the corpus payload
+    offsets: np.ndarray       # i64[n_local + 1], local byte offsets
+
+    @property
+    def n_strings(self) -> int:
+        return len(self.offsets) - 1
+
+    @property
+    def payload_bytes(self) -> int:
+        return int(self.payload.size)
+
+    def string_tokens(self, local: int) -> np.ndarray:
+        """u16 token IDs of local string ``local`` (zero-copy view)."""
+        o0, o1 = int(self.offsets[local]), int(self.offsets[local + 1])
+        return self.payload[o0:o1].view("<u2")
+
+    def tokens(self, lo: int = 0, hi: int | None = None) -> np.ndarray:
+        """One u16 token stream covering local strings [lo, hi)."""
+        if hi is None:
+            hi = self.n_strings
+        o0, o1 = int(self.offsets[lo]), int(self.offsets[hi])
+        return self.payload[o0:o1].view("<u2")
+
+    def token_counts(self) -> np.ndarray:
+        return ((self.offsets[1:] - self.offsets[:-1]) // 2).astype(np.int64)
+
+
+@dataclass
+class SegmentedCorpus:
+    """Fixed-size segmentation of a compressed corpus + global routing."""
+
+    segments: list[Segment]
+    strings_per_segment: int
+    n_strings: int
+    raw_bytes: int
+
+    @classmethod
+    def from_corpus(cls, corpus: CompressedCorpus,
+                    strings_per_segment: int = 4096) -> "SegmentedCorpus":
+        if strings_per_segment < 1:
+            raise ValueError("strings_per_segment must be >= 1")
+        n = corpus.n_strings
+        segments: list[Segment] = []
+        for base in range(0, max(n, 1), strings_per_segment):
+            hi = min(base + strings_per_segment, n)
+            if hi <= base:
+                break
+            b0, b1 = int(corpus.offsets[base]), int(corpus.offsets[hi])
+            segments.append(Segment(
+                index=len(segments), base_id=base,
+                payload=corpus.payload[b0:b1],
+                offsets=(corpus.offsets[base : hi + 1] - b0).astype(np.int64)))
+        if not segments:  # empty corpus still routes scans/len() sanely
+            segments = [Segment(index=0, base_id=0,
+                                payload=corpus.payload[:0],
+                                offsets=np.zeros(1, dtype=np.int64))]
+        return cls(segments=segments, strings_per_segment=strings_per_segment,
+                   n_strings=n, raw_bytes=corpus.raw_bytes)
+
+    # --------------------------------------------------------------- routing
+    def route(self, gid: int) -> tuple[Segment, int]:
+        """Global string id -> (segment, local id). Raises IndexError when
+        out of range (negative ids included — the store is an id-addressed
+        service, not a Python sequence)."""
+        if not 0 <= gid < self.n_strings:
+            raise IndexError(
+                f"string id {gid} out of range [0, {self.n_strings})")
+        seg = self.segments[gid // self.strings_per_segment]
+        return seg, gid - seg.base_id
+
+    def string_tokens(self, gid: int) -> np.ndarray:
+        seg, local = self.route(gid)
+        return seg.string_tokens(local)
+
+    def token_counts(self) -> np.ndarray:
+        """Tokens per string over the whole corpus, in global id order."""
+        if self.n_strings == 0:
+            return np.zeros(0, dtype=np.int64)
+        return np.concatenate([s.token_counts() for s in self.segments])
+
+    @property
+    def n_segments(self) -> int:
+        return len(self.segments)
+
+    @property
+    def payload_bytes(self) -> int:
+        return sum(s.payload_bytes for s in self.segments)

@@ -1,0 +1,159 @@
+"""Micro-batching request service over a CompressedStringStore.
+
+High-volume point-lookup traffic arrives one id at a time; decoding one
+string per kernel launch wastes the batch axis the Pallas decoder
+parallelises over. :class:`StoreService` coalesces concurrent lookups: a
+single worker thread drains the request queue, waits up to ``max_wait_s``
+for the batch to fill (classic micro-batching latency/throughput knob), and
+answers the whole batch with ONE ``store.multiget`` — one padded kernel
+invocation per touched length bucket.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import Future
+
+from repro.core.metrics import LatencyReservoir
+from repro.store.store import CompressedStringStore
+
+_POLL_S = 0.05  # idle wakeup so close() is prompt even with no traffic
+
+
+class StoreService:
+    """Thread-safe coalescing front-end: ``submit(i) -> Future[bytes]``."""
+
+    def __init__(self, store: CompressedStringStore, max_batch: int = 256,
+                 max_wait_s: float = 0.0005):
+        self.store = store
+        self.max_batch = int(max_batch)
+        self.max_wait_s = float(max_wait_s)
+        self._q: queue.SimpleQueue = queue.SimpleQueue()
+        self._stop = threading.Event()
+        self._submit_lock = threading.Lock()  # orders submit() vs close()
+        self._lat_lock = threading.Lock()
+        self._lat = LatencyReservoir()
+        self.requests = 0
+        self.batches = 0
+        self.coalesced = 0          # requests answered in a batch of > 1
+        self.max_batch_seen = 0
+        self._worker = threading.Thread(target=self._run, daemon=True,
+                                        name="store-service")
+        self._worker.start()
+
+    # ----------------------------------------------------------------- client
+    def submit(self, i: int) -> "Future[bytes]":
+        """Enqueue a point lookup; resolves to the decoded string.
+
+        Out-of-range ids fail their own future immediately instead of
+        poisoning the coalesced batch they would have joined.
+        """
+        fut: Future = Future()
+        i = int(i)
+        if not 0 <= i < self.store.n_strings:
+            fut.set_exception(IndexError(
+                f"string id {i} out of range [0, {self.store.n_strings})"))
+            return fut
+        # atomic vs close(): either we enqueue before the shutdown sentinel,
+        # or we observe _stop and fail fast — never an unresolved Future
+        with self._submit_lock:
+            if self._stop.is_set():
+                fut.set_exception(RuntimeError("service is closed"))
+                return fut
+            self.requests += 1
+            self._q.put((i, fut, time.perf_counter()))
+        return fut
+
+    def get(self, i: int, timeout: float | None = 30.0) -> bytes:
+        return self.submit(i).result(timeout)
+
+    def multiget(self, ids, timeout: float | None = 30.0) -> list[bytes]:
+        futures = [self.submit(i) for i in ids]
+        return [f.result(timeout) for f in futures]
+
+    def close(self) -> None:
+        with self._submit_lock:
+            self._stop.set()
+            self._q.put(None)  # wake the worker; nothing enqueues after this
+        self._worker.join(timeout=5.0)
+
+    def __enter__(self) -> "StoreService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def stats(self) -> dict:
+        with self._lat_lock:
+            lat = self._lat.summary()
+        return {"requests": self.requests, "batches": self.batches,
+                "coalesced": self.coalesced,
+                "avg_batch": round(self.requests / self.batches, 2)
+                if self.batches else 0.0,
+                "max_batch_seen": self.max_batch_seen,
+                "request_latency": lat}
+
+    # ----------------------------------------------------------------- worker
+    def _collect_batch(self, first) -> list:
+        """Wait up to max_wait_s for the batch to fill, then drain whatever
+        is immediately available."""
+        batch = [first]
+        deadline = time.perf_counter() + self.max_wait_s
+        while len(batch) < self.max_batch:
+            remaining = deadline - time.perf_counter()
+            try:
+                item = (self._q.get(timeout=remaining) if remaining > 0
+                        else self._q.get_nowait())
+            except queue.Empty:
+                break
+            if item is None:
+                self._stop.set()
+                break
+            batch.append(item)
+        return batch
+
+    def _drain_and_fail(self) -> None:
+        """Fail any request that raced past submit()'s closed check and landed
+        behind the shutdown sentinel — never leave a Future unresolved."""
+        while True:
+            try:
+                item = self._q.get_nowait()
+            except queue.Empty:
+                return
+            if item is not None:
+                item[1].set_exception(RuntimeError("service is closed"))
+
+    def _run(self) -> None:
+        while True:
+            try:
+                item = self._q.get(timeout=_POLL_S)
+            except queue.Empty:
+                if self._stop.is_set():
+                    self._drain_and_fail()
+                    return
+                continue
+            if item is None:
+                if self._stop.is_set():
+                    self._drain_and_fail()
+                    return
+                continue
+            batch = self._collect_batch(item)
+            ids = [i for i, _, _ in batch]
+            try:
+                values = self.store.multiget(ids)
+            except Exception as exc:  # fail the whole batch, keep serving
+                for _, fut, _ in batch:
+                    fut.set_exception(exc)
+            else:
+                done = time.perf_counter()
+                with self._lat_lock:
+                    for _, _, t in batch:
+                        self._lat.record(done - t)
+                if len(batch) > 1:
+                    self.coalesced += len(batch)
+                self.batches += 1
+                self.max_batch_seen = max(self.max_batch_seen, len(batch))
+                for (_, fut, _), val in zip(batch, values):
+                    fut.set_result(val)

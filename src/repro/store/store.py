@@ -1,0 +1,246 @@
+"""CompressedStringStore — batched random-access serving over OnPair corpora.
+
+The paper's headline property (per-string independent compression => O(1)
+random access) turned into a serving subsystem: a trained OnPair/OnPair16
+dictionary plus a :class:`~repro.core.api.CompressedCorpus` become an
+in-memory store answering ``get(i)`` / ``multiget(ids)`` / ``scan(lo, hi)``.
+
+Hot path (``multiget``): cache misses are routed through the segment layer
+to their token streams, *length-bucketed* into a small set of static padded
+``(B, T)`` shapes, and decoded by the Pallas per-string kernel
+(``repro.kernels.onpair_decode.decode_compact`` via
+``OnPairDevice.multiget_decode``). Pinning both the batch dim and the token
+dim to at most ``num_buckets`` bucket capacities keeps the number of
+jit-compiled decode shapes bounded (<= num_buckets, default 4) no matter the
+query mix. When JAX is unavailable — or the dictionary is unbounded OnPair,
+which the 16-byte-row kernel cannot decode — the store falls back to the
+vectorised numpy ``PackedDictionary.decode_tokens`` path.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from repro.core.api import CompressedCorpus
+from repro.core.onpair import OnPairCompressor, make_onpair, make_onpair16
+from repro.core.packed import PackedDictionary
+from repro.store.cache import LRUCache
+from repro.store.segment import SegmentedCorpus
+from repro.store.stats import StoreStats
+
+try:
+    from repro.kernels.ops import OnPairDevice
+    _HAVE_JAX = True
+except Exception:  # pragma: no cover - container without jax
+    OnPairDevice = None
+    _HAVE_JAX = False
+
+#: quantiles of the corpus token-count distribution that seed the bucket
+#: capacities (the last one is stretched to cover the true maximum).
+_BUCKET_QUANTILES = (0.5, 0.9, 0.99, 1.0)
+
+
+def _ceil8(x: int) -> int:
+    return max(8, (int(x) + 7) // 8 * 8)
+
+
+class CompressedStringStore:
+    """Queryable in-memory store over one compressed corpus."""
+
+    def __init__(self, compressor: OnPairCompressor, corpus: CompressedCorpus,
+                 *, strings_per_segment: int = 4096,
+                 cache_bytes: int = 8 << 20, batch_size: int = 256,
+                 num_buckets: int = 4, backend: str = "auto",
+                 use_pallas: bool = True):
+        if compressor.dictionary is None:
+            raise ValueError("compressor must be trained (train() first)")
+        if num_buckets < 1 or num_buckets > len(_BUCKET_QUANTILES):
+            raise ValueError(f"num_buckets must be in 1..{len(_BUCKET_QUANTILES)}")
+        self.compressor = compressor
+        self.dictionary: PackedDictionary = compressor.dictionary
+        self.corpus = corpus
+        self.segments = SegmentedCorpus.from_corpus(corpus, strings_per_segment)
+        self.cache = LRUCache(cache_bytes)
+        self.stats = StoreStats()
+        self.batch_size = int(batch_size)
+        self.use_pallas = use_pallas
+        self._lock = threading.Lock()
+
+        # ----- backend resolution: jax needs the 16-byte-row kernel layout
+        jax_ok = _HAVE_JAX and self.dictionary.variant16
+        if backend == "auto":
+            backend = "jax" if jax_ok else "numpy"
+        elif backend == "jax" and not jax_ok:
+            raise ValueError(
+                "jax backend unavailable: " +
+                ("dictionary is unbounded OnPair (>16B entries)"
+                 if _HAVE_JAX else "jax not importable"))
+        elif backend not in ("jax", "numpy"):
+            raise ValueError(f"unknown backend {backend!r}")
+        self.backend = backend
+        self._device = OnPairDevice(self.dictionary) if backend == "jax" else None
+
+        # ----- length buckets: static token capacities from corpus quantiles
+        counts = corpus.token_counts()
+        if counts.size == 0:
+            caps = [8]
+        else:
+            qs = _BUCKET_QUANTILES[-num_buckets:]
+            caps = sorted({_ceil8(np.quantile(counts, q)) for q in qs})
+            max_count = int(counts.max())
+            if caps[-1] < max_count:
+                caps.append(_ceil8(max_count))
+                caps = caps[-num_buckets:] if len(caps) > num_buckets else caps
+        self.bucket_caps = np.asarray(caps, dtype=np.int64)
+
+    # ------------------------------------------------------------ construction
+    @classmethod
+    def build(cls, strings: list[bytes], *, variant16: bool = True,
+              sample_bytes: int = 4 << 20, seed: int = 0,
+              **store_kw) -> "CompressedStringStore":
+        """Train a dictionary on ``strings``, compress them, open a store."""
+        comp = (make_onpair16 if variant16 else make_onpair)(
+            sample_bytes=sample_bytes, seed=seed)
+        comp.train(strings)
+        return cls(comp, comp.compress(strings), **store_kw)
+
+    # ---------------------------------------------------------------- queries
+    @property
+    def n_strings(self) -> int:
+        return self.segments.n_strings
+
+    def __len__(self) -> int:
+        return self.n_strings
+
+    @property
+    def memory_bytes(self) -> int:
+        """Resident footprint: compressed payload + offsets + the full
+        dictionary (decode matrix and LPM tables included) + decoded-string
+        cache."""
+        return (self.corpus.compressed_bytes + self.corpus.offsets.nbytes
+                + self.dictionary.resident_bytes + self.cache.current_bytes)
+
+    def get(self, i: int) -> bytes:
+        """Point lookup of string ``i``."""
+        return self.multiget([i])[0]
+
+    def multiget(self, ids) -> list[bytes]:
+        """Batched point lookup; duplicates decode once, order is preserved.
+
+        Raises IndexError if any id is out of ``[0, n_strings)`` (before any
+        decode work happens).
+        """
+        t0 = time.perf_counter()
+        ids = [int(i) for i in ids]
+        n = self.n_strings
+        for i in ids:
+            if not 0 <= i < n:
+                raise IndexError(f"string id {i} out of range [0, {n})")
+        with self._lock:
+            results: dict[int, bytes] = {}
+            misses: list[int] = []
+            for i in ids:  # unique-preserving cache probe: duplicates decode once
+                if i in results:
+                    continue
+                hit = self.cache.get(i)
+                if hit is not None:
+                    results[i] = hit
+                else:
+                    results[i] = b""  # claimed; overwritten by decode below
+                    misses.append(i)
+            if misses:
+                self._decode_misses(misses, results)
+            out = [results[i] for i in ids]
+        self.stats.record_multiget(len(ids), time.perf_counter() - t0)
+        return out
+
+    def scan(self, lo: int, hi: int) -> list[bytes]:
+        """Decode the contiguous id range [lo, hi) segment by segment: each
+        segment's covered slice is one token stream, decoded in a single
+        vectorised pass and split on per-string byte boundaries."""
+        n = self.n_strings
+        if not (0 <= lo <= hi <= n):
+            raise IndexError(f"scan range [{lo}, {hi}) not within [0, {n}]")
+        out: list[bytes] = []
+        with self._lock:
+            for seg in self.segments.segments:
+                s_lo = max(lo, seg.base_id)
+                s_hi = min(hi, seg.base_id + seg.n_strings)
+                if s_lo >= s_hi:
+                    continue
+                l0, l1 = s_lo - seg.base_id, s_hi - seg.base_id
+                tokens = np.asarray(seg.tokens(l0, l1), dtype=np.int64)
+                decoded = self.dictionary.decode_tokens(tokens)
+                counts = seg.token_counts()[l0:l1]
+                out.extend(self._split_decoded(decoded, tokens, counts))
+            self.stats.scan_strings += hi - lo
+        return out
+
+    def stats_snapshot(self) -> dict:
+        snap = self.stats.snapshot(self.cache.stats())
+        snap.update(backend=self.backend, n_strings=self.n_strings,
+                    n_segments=self.segments.n_segments,
+                    bucket_caps=[int(c) for c in self.bucket_caps],
+                    memory_bytes=self.memory_bytes)
+        return snap
+
+    # --------------------------------------------------------------- internals
+    def _split_decoded(self, decoded: bytes, tokens: np.ndarray,
+                       counts: np.ndarray) -> list[bytes]:
+        """Split one decoded byte run back into per-string slices."""
+        tok_lens = self.dictionary.lens[tokens].astype(np.int64)
+        byte_cum = np.zeros(tokens.size + 1, dtype=np.int64)
+        np.cumsum(tok_lens, out=byte_cum[1:])
+        bounds = byte_cum[np.concatenate(([0], np.cumsum(counts)))]
+        return [decoded[int(bounds[k]) : int(bounds[k + 1])]
+                for k in range(len(counts))]
+
+    def _decode_misses(self, misses: list[int], results: dict[int, bytes]) -> None:
+        token_lists = [np.asarray(self.segments.string_tokens(i), dtype=np.int32)
+                       for i in misses]
+        if self._device is not None:
+            self._decode_jax(misses, token_lists, results)
+        else:
+            self._decode_numpy(misses, token_lists, results)
+        for i in misses:
+            self.cache.put(i, results[i])
+
+    def _decode_jax(self, misses: list[int], token_lists: list[np.ndarray],
+                    results: dict[int, bytes]) -> None:
+        counts = np.asarray([t.size for t in token_lists], dtype=np.int64)
+        buckets = np.searchsorted(self.bucket_caps, counts, side="left")
+        for b in np.unique(buckets):
+            cap = int(self.bucket_caps[int(b)])
+            members = [k for k in range(len(misses)) if buckets[k] == b]
+            for c0 in range(0, len(members), self.batch_size):
+                chunk = members[c0 : c0 + self.batch_size]
+                t0 = time.perf_counter()
+                decoded = self._device.multiget_decode(
+                    [token_lists[k] for k in chunk], pad_tokens=cap,
+                    pad_batch=self.batch_size, use_pallas=self.use_pallas)
+                dt = time.perf_counter() - t0
+                for k, val in zip(chunk, decoded):
+                    results[misses[k]] = val
+                self.stats.record_decode_batch(
+                    (self.batch_size, cap), len(chunk),
+                    sum(len(v) for v in decoded), dt, jitted=True)
+
+    def _decode_numpy(self, misses: list[int], token_lists: list[np.ndarray],
+                      results: dict[int, bytes]) -> None:
+        """Fallback: all misses concatenate into ONE token stream (strings are
+        independent), decoded by the vectorised host path and re-split."""
+        t0 = time.perf_counter()
+        counts = np.asarray([t.size for t in token_lists], dtype=np.int64)
+        tokens = (np.concatenate(token_lists).astype(np.int64)
+                  if token_lists else np.zeros(0, dtype=np.int64))
+        decoded = self.dictionary.decode_tokens(tokens)
+        parts = self._split_decoded(decoded, tokens, counts)
+        dt = time.perf_counter() - t0
+        for i, val in zip(misses, parts):
+            results[i] = val
+        self.stats.record_decode_batch(
+            (len(misses), int(counts.max()) if counts.size else 0),
+            len(misses), len(decoded), dt, jitted=False)

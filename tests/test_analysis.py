@@ -91,7 +91,10 @@ def test_dataset_shapes_match_paper_profile():
 def test_roofline_loader_reads_records():
     from repro.launch.roofline import load_records
     recs = load_records("16x16")
-    assert len(recs) >= 30
+    if not recs:  # results/ is generated, not checked in: absent on fresh clones
+        pytest.skip("no dryrun records; generate with "
+                    "`python -m repro.launch.dryrun --all`")
+    assert len(recs) >= 30  # partial/truncated sweeps should fail, not pass
     for r in recs[:5]:
         assert {"t_compute_s", "t_memory_s", "t_collective_s",
                 "bottleneck"} <= set(r)

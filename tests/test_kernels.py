@@ -6,8 +6,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # optional dev dep: property tests skip, the rest run
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import make_onpair16
 from repro.core.packed import PackedDictionary, hash_key as np_hash_key, split_u64
