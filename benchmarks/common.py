@@ -7,7 +7,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core import ALL_COMPRESSORS
+from repro.core import registry
 from repro.data.synth import DATASETS, load_dataset
 
 MIB = float(1 << 20)
@@ -30,7 +30,7 @@ class Measurement:
 def measure(name: str, strings: list[bytes], n_queries: int = 20000,
             seed: int = 0, **kw) -> Measurement:
     raw = sum(len(s) for s in strings)
-    comp = ALL_COMPRESSORS[name](**kw) if kw else ALL_COMPRESSORS[name]()
+    comp = registry.create(name, **kw)
     stats = comp.train(strings, raw)
     t0 = time.perf_counter()
     corpus = comp.compress(strings)

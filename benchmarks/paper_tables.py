@@ -77,8 +77,8 @@ def table4_dict_footprint(size_mib: int = 4, datasets=None):
         strings = dataset(ds, size_mib << 20)
         raw = sum(map(len, strings))
         for name in ("onpair", "onpair16"):
-            from repro.core import ALL_COMPRESSORS
-            comp = ALL_COMPRESSORS[name]()
+            from repro.core import registry
+            comp = registry.create(name)
             st = comp.train(strings, raw)
             rows.append({"dataset": ds, "compressor": name,
                          "total_mib": round(st.dict_total_bytes / MIB, 3),

@@ -1,0 +1,77 @@
+"""Persistence benchmark: artifact save/load + store open vs retraining.
+
+The point of the v2 artifact split is that a dictionary is trained once and
+then *opened*, not retrained, on every serving host. This benchmark puts
+numbers on that seam, per codec:
+
+* ``train``      — train + compress + open from scratch (the only option
+                   before artifacts existed);
+* ``save``       — artifact.save + corpus.save + store.save wall time;
+* ``open``       — CompressedStringStore.open(dir): mmap artifact + corpus,
+                   rebuild derived decode tables, ready to serve;
+* ``speedup``    — train_s / open_s (how much a restart stops costing).
+
+Every opened store is checked byte-identical against the in-memory one on a
+sample of ids before its row is emitted.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import dataset
+from repro.core.artifact import DictArtifact
+from repro.store import CompressedStringStore
+
+
+def persist_bench(size_mib: int, codecs=("onpair16", "onpair", "bpe"),
+                  dataset_name: str = "book_titles",
+                  n_check: int = 500, seed: int = 0) -> list[dict]:
+    strings = dataset(dataset_name, size_mib << 20)
+    rng = np.random.default_rng(seed)
+    check_ids = rng.integers(0, len(strings), n_check).tolist()
+    rows: list[dict] = []
+    for codec in codecs:
+        t0 = time.perf_counter()
+        store = CompressedStringStore.build(
+            strings, codec=codec, sample_bytes=min(size_mib, 4) << 20,
+            seed=seed)
+        train_s = time.perf_counter() - t0
+        expect = store.multiget(check_ids)
+
+        tmp = tempfile.mkdtemp(prefix=f"persist-{codec}-")
+        try:
+            t0 = time.perf_counter()
+            store.save(tmp)
+            save_s = time.perf_counter() - t0
+            disk = sum(os.path.getsize(os.path.join(tmp, f))
+                       for f in os.listdir(tmp))
+
+            t0 = time.perf_counter()
+            art = DictArtifact.load(
+                os.path.join(tmp, CompressedStringStore._DICT_FILE))
+            art_load_s = time.perf_counter() - t0
+
+            t0 = time.perf_counter()
+            reopened = CompressedStringStore.open(tmp)
+            open_s = time.perf_counter() - t0
+            assert reopened.multiget(check_ids) == expect, codec
+            rows.append({
+                "dataset": dataset_name, "codec": codec,
+                "n_strings": len(strings),
+                "dict_entries": art.num_entries,
+                "disk_bytes": disk,
+                "train_s": round(train_s, 4),
+                "save_s": round(save_s, 4),
+                "artifact_load_s": round(art_load_s, 5),
+                "open_s": round(open_s, 4),
+                "speedup_vs_retrain": round(train_s / max(open_s, 1e-9), 1),
+            })
+        finally:
+            shutil.rmtree(tmp, ignore_errors=True)
+    return rows

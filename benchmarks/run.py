@@ -137,6 +137,18 @@ def bench_store(size_mib: int) -> None:
               f"per={r['latency_per']}")
 
 
+def bench_persist(size_mib: int) -> None:
+    """Artifact save/load + store.open latency vs retrain-from-scratch."""
+    from benchmarks.persist_bench import persist_bench
+    rows = persist_bench(size_mib)
+    _dump("persist", rows)
+    for r in rows:
+        _emit(f"persist/{r['dataset']}/{r['codec']}", r["open_s"] * 1e6,
+              f"speedup_vs_retrain={r['speedup_vs_retrain']};"
+              f"train_s={r['train_s']};save_s={r['save_s']};"
+              f"disk_mib={r['disk_bytes'] / (1 << 20):.2f}")
+
+
 def bench_roofline(_size_mib: int) -> None:
     """Surface the dry-run roofline summary as bench rows."""
     from repro.launch.roofline import fmt_row, load_records
@@ -160,6 +172,7 @@ ALL = {
     "figures": bench_figures,
     "kernels": bench_kernels,
     "store": bench_store,
+    "persist": bench_persist,
     "roofline": bench_roofline,
 }
 

@@ -36,7 +36,9 @@ print(f"random access: {dt * 1e9:.0f} ns/string over {len(idx)} queries")
 assert store.doc_bytes(17) == strings[17]
 
 # --- device-side detokenisation (kernels) -----------------------------------
-dev = OnPairDevice(store.tokenizer.dictionary)
+# constructed from the serializable artifact — the same object a remote
+# serving host would DictArtifact.load() from disk, no trainer state needed
+dev = OnPairDevice.from_artifact(store.tokenizer.to_artifact())
 batch_ids = [int(i) for i in idx[:64]]
 tokens = [store.doc_tokens(i) for i in batch_ids]
 T = max(len(t) for t in tokens)

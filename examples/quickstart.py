@@ -14,7 +14,7 @@ import time
 
 import numpy as np
 
-from repro.core import ALL_COMPRESSORS
+from repro.core import registry
 from repro.data.synth import load_dataset
 
 strings = load_dataset("book_titles", 2 << 20)
@@ -26,7 +26,7 @@ print(f"{'compressor':11s} {'ratio':>6s} {'comp MiB/s':>11s} "
 
 for name in ("raw", "zstd-block", "fsst", "onpair", "onpair16"):
     try:
-        comp = ALL_COMPRESSORS[name]()
+        comp = registry.create(name)
     except Exception as e:  # e.g. zstandard not installed
         print(f"{name:11s} skipped ({e})")
         continue

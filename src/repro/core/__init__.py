@@ -3,28 +3,47 @@ with fast random access, plus the baselines it is evaluated against
 (BPE, FSST-like, block-based zstd/zlib, RAW).
 
 Layered as: packing (u64 tricks) -> lpm (two-tier longest prefix matching)
--> onpair (training + parsing phases) -> packed (frozen dictionary artifact
-+ static LPM arrays consumed by the JAX/Pallas kernels).
+-> onpair (training + parsing phases) -> packed (frozen dictionary + static
+LPM arrays consumed by the JAX/Pallas kernels).
+
+API v2 splits the codec into three first-class pieces:
+
+  artifact  — DictArtifact: immutable, serializable trained dictionary
+              (token table + config + format version; save/load, mmap-able)
+  codec     — Encoder / Decoder: stateless per-string encode/decode built
+              from an artifact with an explicit backend= (numpy | pallas)
+  registry  — codecs constructible by name with capability flags
+              (token_stream / bounded_entries / device_decodable / trainable)
+
+``StringCompressor`` and ``ALL_COMPRESSORS`` remain as the back-compat shim
+over those pieces.
 """
 
+from repro.core import registry
 from repro.core.api import (CompressedCorpus, RawCompressor, StringCompressor,
                             TrainStats, pack_corpus)
+from repro.core.artifact import DictArtifact
 from repro.core.blockcomp import ZlibBlockCompressor, ZstdBlockCompressor
 from repro.core.bpe import BPECompressor
+from repro.core.codec import Decoder, Encoder
 from repro.core.fsst import FSSTCompressor
 from repro.core.onpair import (MAX_TOKENS, OnPairCompressor, OnPairConfig,
                                auto_threshold, make_onpair, make_onpair16,
                                train_dictionary)
 from repro.core.packed import PackedDictionary
+from repro.core.registry import CodecCaps, CodecSpec
 
+#: Back-compat name->factory view of the registry (pre-v2 callers indexed
+#: this dict directly). Prefer ``registry.create(name)`` going forward.
 ALL_COMPRESSORS = {
-    "raw": RawCompressor,
-    "zlib-block": ZlibBlockCompressor,
-    "zstd-block": ZstdBlockCompressor,
-    "bpe": BPECompressor,
-    "fsst": FSSTCompressor,
-    "onpair": make_onpair,
-    "onpair16": make_onpair16,
+    "raw": registry.get_spec("raw").factory,
+    "zlib-block": registry.get_spec("zlib-block").factory,
+    "zstd-block": registry.get_spec("zstd-block").factory,
+    "lz-block": registry.get_spec("lz-block").factory,
+    "bpe": registry.get_spec("bpe").factory,
+    "fsst": registry.get_spec("fsst").factory,
+    "onpair": registry.get_spec("onpair").factory,
+    "onpair16": registry.get_spec("onpair16").factory,
 }
 
 __all__ = [
@@ -33,4 +52,5 @@ __all__ = [
     "BPECompressor", "FSSTCompressor", "OnPairCompressor", "OnPairConfig",
     "MAX_TOKENS", "auto_threshold", "make_onpair", "make_onpair16",
     "train_dictionary", "PackedDictionary", "ALL_COMPRESSORS",
+    "DictArtifact", "Encoder", "Decoder", "registry", "CodecCaps", "CodecSpec",
 ]

@@ -14,6 +14,9 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.core.artifact import (DictArtifact, dump_container, load_container,
+                                 read_container, write_container)
+
 
 @dataclass
 class CompressedCorpus:
@@ -54,6 +57,76 @@ class CompressedCorpus:
         """Tokens per string, i64[n_strings] (2 bytes per token ID)."""
         return ((self.offsets[1:] - self.offsets[:-1]) // 2).astype(np.int64)
 
+    def slice_strings(self, lo: int, hi: int) -> "CompressedCorpus":
+        """Sub-corpus covering string ids [lo, hi) with rebased offsets.
+
+        Valid only for field-level layouts where ``offsets`` are per-string
+        (token-stream codecs, raw) — block codecs index blocks, not strings.
+        raw_bytes is pro-rated by payload share (exact per-string raw sizes
+        are not stored)."""
+        meta = dict(self.meta)
+        if "str_block" in meta:
+            raise ValueError("slice_strings: block-layout corpora cannot be "
+                             "sliced on string boundaries")
+        b0, b1 = int(self.offsets[lo]), int(self.offsets[hi])
+        share = ((b1 - b0) / self.payload.size if self.payload.size
+                 else (hi - lo) / max(1, self.n_strings))
+        return CompressedCorpus(
+            payload=self.payload[b0:b1],
+            offsets=(self.offsets[lo : hi + 1] - b0).astype(np.int64),
+            raw_bytes=int(round(self.raw_bytes * share)), meta=meta)
+
+    # ------------------------------------------------------------- persistence
+    def _split_meta(self) -> tuple[dict, dict]:
+        """meta -> (json-able scalars, ndarray sections); drops caches."""
+        scalars, arrays = {}, {}
+        for k, v in self.meta.items():
+            if k.startswith("_"):
+                continue  # transient (e.g. block decode cache)
+            if isinstance(v, np.ndarray):
+                arrays[f"meta.{k}"] = v
+            else:
+                scalars[k] = v
+        return scalars, arrays
+
+    def save(self, path: str) -> None:
+        """Persist payload + offsets + meta in the shared artifact container."""
+        scalars, meta_arrays = self._split_meta()
+        header = {"kind": "compressed_corpus", "format_version": 1,
+                  "raw_bytes": int(self.raw_bytes), "meta": scalars}
+        write_container(path, header,
+                        {"payload": self.payload, "offsets": self.offsets,
+                         **meta_arrays})
+
+    def to_bytes(self) -> bytes:
+        scalars, meta_arrays = self._split_meta()
+        header = {"kind": "compressed_corpus", "format_version": 1,
+                  "raw_bytes": int(self.raw_bytes), "meta": scalars}
+        return dump_container(header, {"payload": self.payload,
+                                       "offsets": self.offsets, **meta_arrays})
+
+    @classmethod
+    def _from_parsed(cls, header: dict, arrays: dict) -> "CompressedCorpus":
+        if header.get("kind") != "compressed_corpus":
+            raise ValueError(f"container holds {header.get('kind')!r}, "
+                             "not a compressed_corpus")
+        meta = dict(header.get("meta", {}))
+        for k, v in arrays.items():
+            if k.startswith("meta."):
+                meta[k[len("meta."):]] = v
+        return cls(payload=np.asarray(arrays["payload"], dtype=np.uint8),
+                   offsets=np.asarray(arrays["offsets"], dtype=np.int64),
+                   raw_bytes=int(header["raw_bytes"]), meta=meta)
+
+    @classmethod
+    def load(cls, path: str, mmap: bool = True) -> "CompressedCorpus":
+        header, arrays = read_container(path, mmap=mmap)
+        return cls._from_parsed(header, arrays)
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "CompressedCorpus":
+        return cls._from_parsed(*load_container(data))
+
 
 @dataclass
 class TrainStats:
@@ -65,7 +138,16 @@ class TrainStats:
 
 
 class StringCompressor(abc.ABC):
-    """Train-once, compress/decompress-many string compressor."""
+    """Train-once, compress/decompress-many string compressor.
+
+    Since API v2 this is the back-compat shim over the three first-class
+    pieces: the trained state is an immutable :class:`DictArtifact`
+    (``to_artifact`` / ``from_artifact``), and stateless per-string
+    encode/decode lives in :class:`repro.core.codec.Encoder` /
+    :class:`~repro.core.codec.Decoder`. Subclasses implement the artifact
+    hooks so a trained dictionary can be persisted and reopened on another
+    host without retraining.
+    """
 
     name: str = "base"
 
@@ -85,11 +167,28 @@ class StringCompressor(abc.ABC):
     def access(self, corpus: CompressedCorpus, i: int) -> bytes:
         """Random access: materialise string ``i`` alone."""
 
+    # ---------------------------------------------------------- artifact hooks
+    def to_artifact(self) -> DictArtifact:
+        """Freeze the trained state into a serializable artifact."""
+        raise NotImplementedError(f"{self.name}: to_artifact not implemented")
+
+    @classmethod
+    def from_artifact(cls, artifact: DictArtifact) -> "StringCompressor":
+        """Reconstruct a ready codec from an artifact (no retraining)."""
+        raise NotImplementedError(f"{cls.__name__}: from_artifact not implemented")
+
 
 def pack_corpus(parts: list[bytes], raw_bytes: int, **meta) -> CompressedCorpus:
     offsets = np.zeros(len(parts) + 1, dtype=np.int64)
     np.cumsum([len(p) for p in parts], out=offsets[1:])
-    payload = np.frombuffer(b"".join(parts), dtype=np.uint8).copy()
+    # Single allocation: parts are memcpy'd straight into the payload array
+    # (no intermediate b"".join blob + frombuffer copy).
+    payload = np.empty(int(offsets[-1]), dtype=np.uint8)
+    view = memoryview(payload.data)
+    pos = 0
+    for p in parts:
+        view[pos : pos + len(p)] = p
+        pos += len(p)
     return CompressedCorpus(payload=payload, offsets=offsets,
                             raw_bytes=raw_bytes, meta=dict(meta))
 
@@ -103,10 +202,18 @@ class RawCompressor(StringCompressor):
         return TrainStats()
 
     def compress(self, strings):
-        return pack_corpus(strings, sum(len(s) for s in strings))
+        return pack_corpus(strings, sum(len(s) for s in strings),
+                           compressor=self.name)
 
     def decompress_all(self, corpus):
         return corpus.payload.tobytes()
 
     def access(self, corpus, i):
         return corpus.string_payload(i)
+
+    def to_artifact(self) -> DictArtifact:
+        return DictArtifact.from_config("raw")
+
+    @classmethod
+    def from_artifact(cls, artifact: DictArtifact) -> "RawCompressor":
+        return cls()

@@ -21,6 +21,7 @@ except ImportError:  # pragma: no cover - zstandard is installed in this env
     _zstd = None
 
 from repro.core.api import CompressedCorpus, StringCompressor, TrainStats
+from repro.core.artifact import DictArtifact
 
 
 class BlockCompressor(StringCompressor):
@@ -41,6 +42,15 @@ class BlockCompressor(StringCompressor):
     # API -------------------------------------------------------------------
     def train(self, strings, dataset_bytes=None) -> TrainStats:
         return TrainStats()  # block codecs are trained per-block implicitly
+
+    def to_artifact(self) -> DictArtifact:
+        """Config-only artifact: block codecs carry no trained table."""
+        return DictArtifact.from_config(self.name,
+                                        {"block_bytes": self.block_bytes})
+
+    @classmethod
+    def from_artifact(cls, artifact: DictArtifact) -> "BlockCompressor":
+        return cls(**artifact.config) if artifact.config else cls()
 
     def compress(self, strings) -> CompressedCorpus:
         blocks: list[bytes] = []
@@ -100,8 +110,13 @@ class ZstdBlockCompressor(BlockCompressor):
     def __init__(self, level: int = 3, block_bytes: int = 64 * 1024):
         super().__init__(block_bytes)
         assert _zstd is not None, "zstandard not available"
+        self.level = level
         self._c = _zstd.ZstdCompressor(level=level)
         self._d = _zstd.ZstdDecompressor()
+
+    def to_artifact(self) -> DictArtifact:
+        return DictArtifact.from_config(
+            self.name, {"level": self.level, "block_bytes": self.block_bytes})
 
     def codec_compress(self, data: bytes) -> bytes:
         return self._c.compress(data)
@@ -118,6 +133,10 @@ class ZlibBlockCompressor(BlockCompressor):
     def __init__(self, level: int = 1, block_bytes: int = 64 * 1024):
         super().__init__(block_bytes)
         self.level = level
+
+    def to_artifact(self) -> DictArtifact:
+        return DictArtifact.from_config(
+            self.name, {"level": self.level, "block_bytes": self.block_bytes})
 
     def codec_compress(self, data: bytes) -> bytes:
         return zlib.compress(data, self.level)

@@ -24,6 +24,7 @@ import time
 import numpy as np
 
 from repro.core.api import CompressedCorpus, StringCompressor, TrainStats, pack_corpus
+from repro.core.artifact import DictArtifact
 from repro.core.lpm import lpm_from_entries
 from repro.core.packed import PackedDictionary
 
@@ -160,6 +161,25 @@ class BPECompressor(StringCompressor):
         self.dictionary: PackedDictionary | None = None
         self._lpm = None
 
+    def to_artifact(self) -> DictArtifact:
+        assert self.dictionary is not None, "train() first"
+        cfg = {"max_tokens": self.max_tokens, "sample_bytes": self.sample_bytes,
+               "seed": self.seed}
+        return DictArtifact.from_entries("bpe", self.dictionary.entries,
+                                         config=cfg)
+
+    @classmethod
+    def from_artifact(cls, artifact: DictArtifact) -> "BPECompressor":
+        comp = cls(**artifact.config) if artifact.config else cls()
+        comp.dictionary = PackedDictionary.build(artifact.entries)
+        return comp
+
+    def _parser(self):
+        if self._lpm is None:
+            assert self.dictionary is not None, "train() first"
+            self._lpm = lpm_from_entries(self.dictionary.entries)
+        return self._lpm
+
     def train(self, strings, dataset_bytes=None) -> TrainStats:
         t0 = time.perf_counter()
         entries = train_bpe(strings, self.max_tokens, self.sample_bytes, self.seed)
@@ -174,8 +194,7 @@ class BPECompressor(StringCompressor):
         )
 
     def compress(self, strings) -> CompressedCorpus:
-        assert self._lpm is not None
-        parse = self._lpm.parse
+        parse = self._parser().parse
         parts, raw = [], 0
         for s in strings:
             raw += len(s)

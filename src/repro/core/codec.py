@@ -1,0 +1,120 @@
+"""Stateless Encoder / Decoder objects over a :class:`DictArtifact`.
+
+The v2 split of ``StringCompressor``: training produces an immutable
+artifact; per-string encode/decode are stateless operations *constructed
+from* that artifact with an explicit backend selector:
+
+    artifact = registry.train("onpair16", strings)
+    artifact.save("dict.rpa")
+    ...
+    art = DictArtifact.load("dict.rpa")             # any host, no retraining
+    corpus = Encoder(art).encode(strings)
+    Decoder(art, backend="pallas").access(corpus, 17)
+
+Backends:
+
+* ``numpy``  — host path: greedy LPM parse / vectorised Algorithm-3 decode.
+  Works for every registered codec; the only backend when JAX is absent.
+* ``pallas`` — device path through :class:`repro.kernels.ops.OnPairDevice`
+  (encode kernel + per-string decode kernel). Requires JAX and a codec whose
+  registry capabilities say ``device_decodable`` (onpair16's bounded-entry
+  token-stream layout).
+
+Both backends produce byte-identical results; tests pin that equivalence.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import repro.core.registry as registry
+from repro.core.api import CompressedCorpus
+from repro.core.artifact import DictArtifact
+
+BACKENDS = ("numpy", "pallas")
+
+
+def _check_backend(artifact: DictArtifact, backend: str):
+    """Resolve + validate; returns an OnPairDevice for the pallas backend."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r} (one of {BACKENDS})")
+    if backend == "numpy":
+        return None
+    caps = registry.capabilities(artifact.codec)
+    if not caps.device_decodable:
+        raise ValueError(f"codec {artifact.codec!r} is not device-decodable "
+                         "(registry capability); use backend='numpy'")
+    try:
+        from repro.kernels.ops import OnPairDevice
+    except Exception as e:  # jax missing on this host
+        raise ValueError(f"backend='pallas' unavailable: {e}") from None
+    return OnPairDevice.from_artifact(artifact)
+
+
+class Encoder:
+    """Stateless per-string encoder constructed from an artifact."""
+
+    def __init__(self, artifact: DictArtifact, backend: str = "numpy"):
+        self.artifact = artifact
+        self.backend = backend
+        self._device = _check_backend(artifact, backend)
+        # the host codec (and its PackedDictionary rebuild) is only needed on
+        # the numpy path; the pallas path decodes through the device tables
+        self._codec = (registry.codec_from_artifact(artifact)
+                       if self._device is None else None)
+
+    def encode(self, strings: list[bytes]) -> CompressedCorpus:
+        """Compress every string independently into one corpus."""
+        if self._device is None:
+            return self._codec.compress(strings)
+        from repro.core.api import pack_corpus
+        parts = self._device.encode_to_bytes(strings)
+        return pack_corpus(parts, sum(len(s) for s in strings),
+                           compressor=registry.resolve(self.artifact.codec))
+
+    def encode_one(self, s: bytes) -> bytes:
+        """Compressed payload of a single string."""
+        if self._device is None:
+            corpus = self._codec.compress([s])
+            return corpus.string_payload(0)
+        return self._device.encode_to_bytes([s])[0]
+
+
+class Decoder:
+    """Stateless decoder constructed from an artifact."""
+
+    def __init__(self, artifact: DictArtifact, backend: str = "numpy"):
+        self.artifact = artifact
+        self.backend = backend
+        self._device = _check_backend(artifact, backend)
+        self._codec = (registry.codec_from_artifact(artifact)
+                       if self._device is None else None)
+        self._caps = registry.capabilities(artifact.codec)
+
+    @property
+    def dictionary(self):
+        """The frozen PackedDictionary (token-stream codecs only)."""
+        if self._device is not None:
+            return self._device.dictionary
+        return getattr(self._codec, "dictionary", None)
+
+    def decode_all(self, corpus: CompressedCorpus) -> bytes:
+        """Sequential full-corpus decode (concatenated strings)."""
+        if self._device is not None:
+            tokens = np.asarray(corpus.payload.view("<u2"), dtype=np.int32)
+            return self._device.decode_stream(tokens)
+        return self._codec.decompress_all(corpus)
+
+    def access(self, corpus: CompressedCorpus, i: int) -> bytes:
+        """Random access: string ``i`` alone."""
+        if self._device is not None:
+            return self.multiget(corpus, [i])[0]
+        return self._codec.access(corpus, i)
+
+    def multiget(self, corpus: CompressedCorpus, ids) -> list[bytes]:
+        """Batched random access; one kernel launch on the pallas backend."""
+        if self._device is not None:
+            lists = [np.asarray(corpus.string_tokens(int(i)), dtype=np.int32)
+                     for i in ids]
+            return self._device.multiget_decode(lists)
+        return [self._codec.access(corpus, int(i)) for i in ids]

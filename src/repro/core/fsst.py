@@ -22,6 +22,7 @@ from collections import Counter
 import numpy as np
 
 from repro.core.api import CompressedCorpus, StringCompressor, TrainStats, pack_corpus
+from repro.core.artifact import DictArtifact
 
 ESCAPE = 255
 _ARANGE8 = np.arange(8, dtype=np.int64)
@@ -169,6 +170,20 @@ class FSSTCompressor(StringCompressor):
         self._matcher: _Matcher | None = None
         self._mat8: np.ndarray | None = None
         self._lens: np.ndarray | None = None
+
+    def to_artifact(self) -> DictArtifact:
+        assert self.table is not None, "train() first"
+        cfg = {"sample_bytes": self.sample_bytes,
+               "generations": self.generations, "seed": self.seed}
+        return DictArtifact.from_entries("fsst", self.table, config=cfg)
+
+    @classmethod
+    def from_artifact(cls, artifact: DictArtifact) -> "FSSTCompressor":
+        comp = cls(**artifact.config) if artifact.config else cls()
+        comp.table = artifact.entries
+        comp._matcher = _Matcher(comp.table)
+        comp._mat8, comp._lens = _build_decode_tables(comp.table)
+        return comp
 
     def train(self, strings, dataset_bytes=None) -> TrainStats:
         t0 = time.perf_counter()

@@ -23,12 +23,13 @@ from __future__ import annotations
 
 import math
 import time
-from dataclasses import dataclass
+from dataclasses import asdict, dataclass
 
 import numpy as np
 
 from repro.core.api import CompressedCorpus, StringCompressor, TrainStats, pack_corpus
-from repro.core.lpm import DynamicLPM
+from repro.core.artifact import DictArtifact
+from repro.core.lpm import DynamicLPM, lpm_from_entries
 from repro.core.packed import PackedDictionary
 
 MAX_TOKENS = 65536  # 2-byte token IDs (paper §3.1)
@@ -59,6 +60,10 @@ class OnPairConfig:
         kw.setdefault("max_entry_len", 16)
         kw.setdefault("max_bucket", 128)
         return OnPairConfig(**kw)
+
+    @property
+    def codec_name(self) -> str:
+        return "onpair16" if self.max_entry_len == 16 else "onpair"
 
 
 def auto_threshold(dataset_bytes: int) -> int:
@@ -171,10 +176,39 @@ class OnPairCompressor(StringCompressor):
         if cfg is None:
             cfg = OnPairConfig.onpair16() if variant16 else OnPairConfig.onpair()
         self.cfg = cfg
-        self.name = "onpair16" if cfg.max_entry_len == 16 else "onpair"
+        self.name = cfg.codec_name
         self.dictionary: PackedDictionary | None = None
         self._lpm: DynamicLPM | None = None
         self.train_result: TrainResult | None = None
+        self._train_stats: TrainStats | None = None
+
+    # ---------------------------------------------------------------- artifact
+    def to_artifact(self) -> DictArtifact:
+        """Freeze the trained dictionary into a serializable artifact."""
+        assert self.dictionary is not None, "train() first"
+        stats = asdict(self._train_stats) if self._train_stats else {}
+        return DictArtifact.from_entries(self.name, self.dictionary.entries,
+                                         config=asdict(self.cfg), stats=stats)
+
+    @classmethod
+    def from_artifact(cls, artifact: DictArtifact) -> "OnPairCompressor":
+        """Ready-to-use codec from an artifact — rebuilds the decode layout;
+        the parsing LPM is rebuilt lazily on first compress()."""
+        cfg = OnPairConfig(**artifact.config) if artifact.config else (
+            OnPairConfig.onpair16() if artifact.codec == "onpair16"
+            else OnPairConfig.onpair())
+        comp = cls(cfg)
+        comp.dictionary = PackedDictionary.build(artifact.entries)
+        return comp
+
+    def _parser(self) -> DynamicLPM:
+        """The greedy-parse LPM; rebuilt from the frozen dictionary when this
+        codec was reconstructed from an artifact (decode-only paths never
+        pay this cost)."""
+        if self._lpm is None:
+            assert self.dictionary is not None, "train() first"
+            self._lpm = lpm_from_entries(self.dictionary.entries)
+        return self._lpm
 
     # ------------------------------------------------------------------ train
     def train(self, strings: list[bytes], dataset_bytes: int | None = None) -> TrainStats:
@@ -184,18 +218,18 @@ class OnPairCompressor(StringCompressor):
         self._lpm = result.lpm
         self.dictionary = PackedDictionary.build(result.entries)
         dt = time.perf_counter() - t0
-        return TrainStats(
+        self._train_stats = TrainStats(
             train_seconds=dt,
             sample_bytes=result.scanned_bytes,
             dict_entries=len(result.entries),
             dict_data_bytes=self.dictionary.data_bytes,
             dict_total_bytes=self.dictionary.total_bytes,
         )
+        return self._train_stats
 
     # --------------------------------------------------------------- compress
     def compress(self, strings: list[bytes]) -> CompressedCorpus:
-        assert self._lpm is not None, "train() first"
-        parse = self._lpm.parse
+        parse = self._parser().parse
         parts: list[bytes] = []
         raw = 0
         for s in strings:
@@ -205,8 +239,7 @@ class OnPairCompressor(StringCompressor):
         return pack_corpus(parts, raw, compressor=self.name)
 
     def compress_string(self, s: bytes) -> bytes:
-        assert self._lpm is not None, "train() first"
-        return np.asarray(self._lpm.parse(s), dtype="<u2").tobytes()
+        return np.asarray(self._parser().parse(s), dtype="<u2").tobytes()
 
     # ------------------------------------------------------------- decompress
     def decompress_all(self, corpus: CompressedCorpus) -> bytes:

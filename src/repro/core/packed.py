@@ -19,10 +19,13 @@ and in the JAX kernels.
 
 from __future__ import annotations
 
-import io
 from dataclasses import dataclass
+from typing import TYPE_CHECKING
 
 import numpy as np
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.core.artifact import DictArtifact
 
 _ARANGE16 = np.arange(16, dtype=np.int64)
 
@@ -265,28 +268,31 @@ class PackedDictionary:
         return b"".join(parts[t] for t in tokens)
 
     # -------------------------------------------------------------- serialise
+    # The persistent form of a dictionary is a DictArtifact (table + codec
+    # name + format version); the static-LPM/hash arrays are derived
+    # deterministically from the entries at build() time, so only the table
+    # ships. These helpers exist for callers holding a bare dictionary.
+    def to_artifact(self, codec: str | None = None) -> "DictArtifact":
+        from repro.core.artifact import DictArtifact
+        return DictArtifact.from_entries(
+            codec or ("onpair16" if self.variant16 else "onpair"), self.entries)
+
+    @classmethod
+    def from_artifact(cls, artifact) -> "PackedDictionary":
+        return cls.build(artifact.entries)
+
     def save(self, path: str) -> None:
-        np.savez_compressed(path, blob=self.blob, offsets=self.offsets)
+        self.to_artifact().save(path)
 
     @classmethod
     def load(cls, path: str) -> "PackedDictionary":
-        with np.load(path) as z:
-            blob, offsets = z["blob"], z["offsets"]
-        raw = blob.tobytes()
-        entries = [raw[int(offsets[i]) : int(offsets[i + 1])]
-                   for i in range(len(offsets) - 1)]
-        return cls.build(entries)
+        from repro.core.artifact import DictArtifact
+        return cls.from_artifact(DictArtifact.load(path))
 
     def to_bytes(self) -> bytes:
-        buf = io.BytesIO()
-        np.savez_compressed(buf, blob=self.blob, offsets=self.offsets)
-        return buf.getvalue()
+        return self.to_artifact().to_bytes()
 
     @classmethod
     def from_bytes(cls, data: bytes) -> "PackedDictionary":
-        with np.load(io.BytesIO(data)) as z:
-            blob, offsets = z["blob"], z["offsets"]
-        raw = blob.tobytes()
-        entries = [raw[int(offsets[i]) : int(offsets[i + 1])]
-                   for i in range(len(offsets) - 1)]
-        return cls.build(entries)
+        from repro.core.artifact import DictArtifact
+        return cls.from_artifact(DictArtifact.from_bytes(data))

@@ -54,13 +54,18 @@ class OnPairTokenizer:
     def from_dictionary(cls, dictionary: PackedDictionary) -> "OnPairTokenizer":
         comp = OnPairCompressor(OnPairConfig.onpair16())
         comp.dictionary = dictionary
-        from repro.core.lpm import lpm_from_entries
-        comp._lpm = lpm_from_entries(dictionary.entries)
         return cls(comp)
+
+    @classmethod
+    def from_artifact(cls, artifact) -> "OnPairTokenizer":
+        return cls(OnPairCompressor.from_artifact(artifact))
+
+    def to_artifact(self):
+        return self.compressor.to_artifact()
 
     # ----------------------------------------------------------------- encode
     def encode(self, text: bytes, bos: bool = False, eos: bool = False) -> np.ndarray:
-        ids = self.compressor._lpm.parse(text)
+        ids = self.compressor._parser().parse(text)
         if bos:
             ids = [BOS_ID] + ids
         if eos:

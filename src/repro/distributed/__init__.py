@@ -1,1 +1,13 @@
-"""repro subpackage."""
+"""Distribution layer: mesh/sharding rules for the production meshes
+(``sharding``), compressed cross-pod collectives (``compress``), and
+segment-sharded store persistence (``shard_store`` — numpy-only, no jax
+needed to write or serve shards).
+
+``shard_store`` is re-exported here; the jax-dependent modules are imported
+lazily by their callers so a numpy-only host can still shard and serve.
+"""
+
+from repro.distributed.shard_store import (ShardedStringStore, open_shard,
+                                           plan_shards, save_sharded)
+
+__all__ = ["ShardedStringStore", "open_shard", "plan_shards", "save_sharded"]

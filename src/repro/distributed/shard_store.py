@@ -1,0 +1,156 @@
+"""Segment-sharded store persistence — the distribution seam for serving one
+compressed corpus from many hosts (ROADMAP: shard segments across hosts).
+
+Built entirely on the v2 persistence pieces: the train-once
+:class:`~repro.core.artifact.DictArtifact` is written **once** and shared by
+every shard (the paper's dictionary is global state; only payloads shard),
+while the corpus is split on *segment* boundaries — the store's existing
+unit of scan decoding and routing — into N contiguous shards, each an
+independently openable :class:`~repro.store.store.CompressedStringStore`
+directory. A host serving shard k opens ``<dir>/shard-000k`` plus the shared
+dictionary and answers its id range; :class:`ShardedStringStore` is the
+single-process router used for testing and single-host serving.
+
+Pure numpy — no jax required on either the writer or the reader host.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.core import registry
+from repro.core.artifact import DictArtifact
+from repro.store.store import CompressedStringStore, write_json_atomic
+
+MANIFEST = "shards.json"
+DICT_FILE = "dictionary.rpa"
+
+
+def plan_shards(n_strings: int, strings_per_segment: int,
+                n_shards: int) -> list[tuple[int, int]]:
+    """Contiguous [lo, hi) string-id ranges, split on segment boundaries.
+
+    Segments are never split across shards (they are the routing/decode
+    unit); shard sizes differ by at most one segment.
+    """
+    if n_shards < 1:
+        raise ValueError("n_shards must be >= 1")
+    n_segments = max(1, -(-n_strings // strings_per_segment))
+    n_shards = min(n_shards, n_segments)
+    bounds: list[tuple[int, int]] = []
+    per, extra = divmod(n_segments, n_shards)
+    seg = 0
+    for k in range(n_shards):
+        take = per + (1 if k < extra else 0)
+        lo = min(seg * strings_per_segment, n_strings)
+        seg += take
+        hi = min(seg * strings_per_segment, n_strings)
+        bounds.append((lo, hi))
+    return bounds
+
+
+def save_sharded(store: CompressedStringStore, dir_path: str,
+                 n_shards: int) -> list[tuple[int, int]]:
+    """Write ``store`` as one shared dictionary + N shard corpora.
+
+    Layout::
+
+        <dir>/dictionary.rpa     shared train-once artifact
+        <dir>/shards.json        manifest: codec, id ranges, store params
+        <dir>/shard-0000/        corpus.rpc + store.json (openable alone)
+        ...
+    """
+    caps = registry.capabilities(store.artifact.codec)
+    if not caps.token_stream:
+        raise ValueError("sharding slices corpora on string boundaries; "
+                         f"codec {store.artifact.codec!r} is not token_stream")
+    os.makedirs(dir_path, exist_ok=True)
+    store.artifact.save(os.path.join(dir_path, DICT_FILE))
+    sps = store.segments.strings_per_segment
+    bounds = plan_shards(store.n_strings, sps, n_shards)
+    for k, (lo, hi) in enumerate(bounds):
+        sub = store.corpus.slice_strings(lo, hi)
+        shard_dir = os.path.join(dir_path, f"shard-{k:04d}")
+        os.makedirs(shard_dir, exist_ok=True)
+        sub.save(os.path.join(shard_dir, CompressedStringStore._CORPUS_FILE))
+        write_json_atomic(
+            os.path.join(shard_dir, CompressedStringStore._META_FILE),
+            store.store_meta(base_id=lo, n_strings=hi - lo))
+    write_json_atomic(
+        os.path.join(dir_path, MANIFEST),
+        {"format_version": 1, "codec": store.artifact.codec,
+         "n_shards": len(bounds), "n_strings": store.n_strings,
+         "bounds": [list(b) for b in bounds],
+         "strings_per_segment": sps})
+    return bounds
+
+
+def open_shard(dir_path: str, shard: int, mmap: bool = True,
+               source=None, **overrides) -> CompressedStringStore:
+    """What one serving host does: shared dictionary + its shard's corpus.
+    Pass ``source`` (a loaded artifact or codec) when opening several
+    shards so the dictionary loads — and its decode tables rebuild — once."""
+    if source is None:
+        source = DictArtifact.load(os.path.join(dir_path, DICT_FILE),
+                                   mmap=mmap)
+    return CompressedStringStore.open_corpus_dir(
+        os.path.join(dir_path, f"shard-{shard:04d}"), source,
+        mmap=mmap, **overrides)
+
+
+class ShardedStringStore:
+    """Global-id router over per-shard stores (single-process form).
+
+    The same routing arithmetic a multi-host deployment performs at its RPC
+    layer: global id -> (shard, local id) via the manifest's contiguous
+    bounds; multiget partitions ids per shard, one batched decode each.
+    """
+
+    def __init__(self, stores: list[CompressedStringStore],
+                 bounds: list[tuple[int, int]]):
+        if len(stores) != len(bounds):
+            raise ValueError("one store per shard bound required")
+        self.stores = stores
+        self.bounds = [tuple(b) for b in bounds]
+        self.n_strings = bounds[-1][1] if bounds else 0
+
+    @classmethod
+    def open(cls, dir_path: str, mmap: bool = True,
+             **overrides) -> "ShardedStringStore":
+        with open(os.path.join(dir_path, MANIFEST)) as f:
+            manifest = json.load(f)
+        artifact = DictArtifact.load(os.path.join(dir_path, DICT_FILE),
+                                     mmap=mmap)
+        codec = registry.codec_from_artifact(artifact)  # one table rebuild
+        stores = [open_shard(dir_path, k, mmap=mmap, source=codec,
+                             **overrides)
+                  for k in range(manifest["n_shards"])]
+        return cls(stores, [tuple(b) for b in manifest["bounds"]])
+
+    def route(self, gid: int) -> tuple[int, int]:
+        if not 0 <= gid < self.n_strings:
+            raise IndexError(f"string id {gid} out of range "
+                             f"[0, {self.n_strings})")
+        for k, (lo, hi) in enumerate(self.bounds):
+            if lo <= gid < hi:
+                return k, gid - lo
+        raise IndexError(f"string id {gid} not covered by any shard")
+
+    def get(self, gid: int) -> bytes:
+        k, local = self.route(gid)
+        return self.stores[k].get(local)
+
+    def multiget(self, ids) -> list[bytes]:
+        """Order-preserving batched lookup: ids partition per shard, each
+        shard answers with ONE batched decode."""
+        routed = [self.route(int(i)) for i in ids]
+        per_shard: dict[int, list[int]] = {}
+        for pos, (k, local) in enumerate(routed):
+            per_shard.setdefault(k, []).append(pos)
+        out: list[bytes | None] = [None] * len(routed)
+        for k, positions in per_shard.items():
+            got = self.stores[k].multiget([routed[p][1] for p in positions])
+            for p, v in zip(positions, got):
+                out[p] = v
+        return out  # type: ignore[return-value]

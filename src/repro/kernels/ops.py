@@ -69,6 +69,18 @@ class OnPairDevice:
         self.dictionary = dictionary
         self.dd = DeviceDict.build(dictionary)
 
+    @classmethod
+    def from_artifact(cls, artifact) -> "OnPairDevice":
+        """Open the device codec straight from a serialized DictArtifact —
+        the shipping path: train on one host, save, decode on another."""
+        from repro.core import registry
+        if not registry.capabilities(artifact.codec).device_decodable:
+            raise ValueError(
+                f"codec {artifact.codec!r} is not device-decodable "
+                "(registry capability); only bounded-entry token-stream "
+                "dictionaries run on the kernels")
+        return cls(PackedDictionary.build(artifact.entries))
+
     # ----------------------------------------------------------- encode
     def encode_batch(self, strings: list[bytes], use_pallas: bool = True,
                      max_tokens: int | None = None):

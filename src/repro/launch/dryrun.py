@@ -101,6 +101,11 @@ def analyze_cell(arch: str, shape_name: str, multi_pod: bool = False,
              "temp_size_in_bytes", "generated_code_size_in_bytes")
         } if mem is not None else {}
         cost = compiled.cost_analysis() or {}
+        # cost_analysis() is jax-version sensitive: some releases (e.g. the
+        # 0.4.37 on this container) return a one-element list of per-program
+        # dicts, others the flat dict itself. Accept both shapes.
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
         # raw XLA numbers (while bodies counted ONCE — kept for reference)
         record["flops_hlo_raw"] = float(cost.get("flops", 0.0))
         record["bytes_hlo_raw"] = float(cost.get("bytes accessed", 0.0))

@@ -35,6 +35,11 @@ def main() -> None:
     ap.add_argument("--doc-ids", type=int, nargs="*", default=None,
                     help="additionally serve prompts fetched by id from the "
                          "OnPair-compressed corpus store (repro.store)")
+    ap.add_argument("--store-dir", default=None,
+                    help="open a persisted CompressedStringStore (built with "
+                         "store.save(dir)) instead of compressing in-process; "
+                         "the store's saved dictionary artifact becomes the "
+                         "tokenizer vocabulary")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=128)
     args = ap.parse_args()
@@ -43,9 +48,24 @@ def main() -> None:
     if args.smoke:
         cfg = cfg.smoke()
 
-    # OnPair tokenizer trained on a small corpus (vocab == dictionary)
-    corpus_strings = load_dataset("book_titles", 1 << 20)
-    tok = OnPairTokenizer.train(corpus_strings, sample_bytes=1 << 20)
+    store = None
+    if args.store_dir:
+        # persisted-store path: the saved dictionary artifact IS the vocab —
+        # nothing is retrained, the host just opens the directory
+        from repro.core import registry
+        from repro.store import CompressedStringStore
+        store = CompressedStringStore.open(args.store_dir)
+        codec = registry.resolve(store.artifact.codec)
+        if codec not in ("onpair", "onpair16"):
+            raise SystemExit(
+                f"--store-dir: store was built with codec {codec!r}; the LM "
+                "tokenizer vocabulary is an OnPair dictionary — rebuild the "
+                "store with codec='onpair16'")
+        tok = OnPairTokenizer.from_artifact(store.artifact)
+    else:
+        # OnPair tokenizer trained on a small corpus (vocab == dictionary)
+        corpus_strings = load_dataset("book_titles", 1 << 20)
+        tok = OnPairTokenizer.train(corpus_strings, sample_bytes=1 << 20)
     from dataclasses import replace
     cfg = replace(cfg, vocab_size=tok.vocab_size)
     params = build_params(cfg, seed=0)
@@ -54,9 +74,12 @@ def main() -> None:
     if args.doc_ids:
         # corpus path: the store answers the prompt fetch as one batched,
         # length-bucketed kernel decode over the compressed payload
-        from repro.store import CompressedStringStore
-        store = CompressedStringStore(
-            tok.compressor, tok.compressor.compress(corpus_strings))
+        if store is None:
+            from repro.core.codec import Encoder
+            from repro.store import CompressedStringStore
+            artifact = tok.to_artifact()
+            store = CompressedStringStore(
+                artifact, Encoder(artifact).encode(corpus_strings))
         docs = store.multiget(args.doc_ids)
         prompt_bytes += docs
         # display names only; latin-1 roundtrips arbitrary doc bytes

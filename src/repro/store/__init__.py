@@ -6,9 +6,15 @@ Layered between the compression algorithms (repro.core) / device kernels
   segment  — multi-segment corpus layout + global->(segment, local) routing
   cache    — byte-budgeted LRU over decoded strings
   store    — CompressedStringStore: get / multiget / scan with
-             length-bucketed static-shape Pallas decode (numpy fallback)
+             length-bucketed static-shape Pallas decode (numpy fallback),
+             plus save(dir)/open(dir) persistence over the DictArtifact +
+             CompressedCorpus containers (no retraining on open)
   service  — micro-batching request queue coalescing point lookups
   stats    — serving counters surfaced through repro.core.metrics
+
+Segment-sharded multi-host persistence lives in
+``repro.distributed.shard_store`` (one shared dictionary artifact, one
+openable store directory per shard).
 """
 
 from repro.store.cache import LRUCache

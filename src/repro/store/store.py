@@ -19,13 +19,16 @@ vectorised numpy ``PackedDictionary.decode_tokens`` path.
 
 from __future__ import annotations
 
+import json
+import os
 import threading
 import time
 
 import numpy as np
 
+from repro.core import registry
 from repro.core.api import CompressedCorpus
-from repro.core.onpair import OnPairCompressor, make_onpair, make_onpair16
+from repro.core.artifact import DictArtifact
 from repro.core.packed import PackedDictionary
 from repro.store.cache import LRUCache
 from repro.store.segment import SegmentedCorpus
@@ -47,16 +50,41 @@ def _ceil8(x: int) -> int:
     return max(8, (int(x) + 7) // 8 * 8)
 
 
-class CompressedStringStore:
-    """Queryable in-memory store over one compressed corpus."""
+def write_json_atomic(path: str, obj: dict) -> None:
+    """Write JSON via temp-file + rename so readers never see a torn file."""
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(obj, f, indent=1)
+    os.replace(tmp, path)
 
-    def __init__(self, compressor: OnPairCompressor, corpus: CompressedCorpus,
+
+class CompressedStringStore:
+    """Queryable in-memory store over one compressed corpus.
+
+    ``source`` is either a trained token-stream codec (the pre-v2 calling
+    convention) or a serialized :class:`DictArtifact` — the store is exactly
+    the consumer the artifact split exists for: open a dictionary that was
+    trained elsewhere and serve, no trainer state required.
+    """
+
+    def __init__(self, source, corpus: CompressedCorpus,
                  *, strings_per_segment: int = 4096,
                  cache_bytes: int = 8 << 20, batch_size: int = 256,
                  num_buckets: int = 4, backend: str = "auto",
                  use_pallas: bool = True):
-        if compressor.dictionary is None:
-            raise ValueError("compressor must be trained (train() first)")
+        if isinstance(source, DictArtifact):
+            self._artifact: DictArtifact | None = source
+            compressor = registry.codec_from_artifact(source)
+        else:
+            self._artifact = None
+            compressor = source
+        if getattr(compressor, "dictionary", None) is None:
+            raise ValueError("source must be a trained token-stream codec "
+                             "or a DictArtifact (train() first)")
+        caps = registry.capabilities(compressor.name)
+        if not caps.token_stream:
+            raise ValueError(f"store requires a token-stream codec "
+                             f"(registry capability), got {compressor.name!r}")
         if num_buckets < 1 or num_buckets > len(_BUCKET_QUANTILES):
             raise ValueError(f"num_buckets must be in 1..{len(_BUCKET_QUANTILES)}")
         self.compressor = compressor
@@ -66,18 +94,21 @@ class CompressedStringStore:
         self.cache = LRUCache(cache_bytes)
         self.stats = StoreStats()
         self.batch_size = int(batch_size)
+        self.num_buckets = int(num_buckets)
         self.use_pallas = use_pallas
         self._lock = threading.Lock()
 
-        # ----- backend resolution: jax needs the 16-byte-row kernel layout
-        jax_ok = _HAVE_JAX and self.dictionary.variant16
+        # ----- backend resolution: per-codec registry capability, not an
+        # isinstance/variant16 probe — an artifact opened on a jax-less host
+        # resolves to numpy, a device-decodable codec routes to the kernels.
+        jax_ok = _HAVE_JAX and caps.device_decodable
         if backend == "auto":
             backend = "jax" if jax_ok else "numpy"
         elif backend == "jax" and not jax_ok:
             raise ValueError(
                 "jax backend unavailable: " +
-                ("dictionary is unbounded OnPair (>16B entries)"
-                 if _HAVE_JAX else "jax not importable"))
+                (f"codec {compressor.name!r} is not device-decodable "
+                 "(registry capability)" if _HAVE_JAX else "jax not importable"))
         elif backend not in ("jax", "numpy"):
             raise ValueError(f"unknown backend {backend!r}")
         self.backend = backend
@@ -98,14 +129,78 @@ class CompressedStringStore:
 
     # ------------------------------------------------------------ construction
     @classmethod
-    def build(cls, strings: list[bytes], *, variant16: bool = True,
-              sample_bytes: int = 4 << 20, seed: int = 0,
-              **store_kw) -> "CompressedStringStore":
-        """Train a dictionary on ``strings``, compress them, open a store."""
-        comp = (make_onpair16 if variant16 else make_onpair)(
-            sample_bytes=sample_bytes, seed=seed)
+    def build(cls, strings: list[bytes], *, codec: str | None = None,
+              variant16: bool = True, sample_bytes: int = 4 << 20,
+              seed: int = 0, **store_kw) -> "CompressedStringStore":
+        """Train a dictionary on ``strings``, compress them, open a store.
+
+        ``codec`` is any registered token-stream codec name; the legacy
+        ``variant16`` flag maps to onpair16/onpair when ``codec`` is None.
+        """
+        if codec is None:
+            codec = "onpair16" if variant16 else "onpair"
+        comp = registry.create(codec, sample_bytes=sample_bytes, seed=seed)
         comp.train(strings)
         return cls(comp, comp.compress(strings), **store_kw)
+
+    # ------------------------------------------------------------- persistence
+    #: directory layout written by save() / read by open()
+    _DICT_FILE = "dictionary.rpa"
+    _CORPUS_FILE = "corpus.rpc"
+    _META_FILE = "store.json"
+    #: construction params persisted in store.json and restored by open()
+    _STORE_KW = ("strings_per_segment", "cache_bytes", "batch_size",
+                 "num_buckets")
+
+    @property
+    def artifact(self) -> DictArtifact:
+        """The store's dictionary as an immutable, serializable artifact."""
+        if self._artifact is None:
+            self._artifact = self.compressor.to_artifact()
+        return self._artifact
+
+    def store_meta(self, **extra) -> dict:
+        """The store.json payload: codec + construction params (+ extras)."""
+        meta = {"format_version": 1, "codec": self.artifact.codec,
+                "n_strings": self.n_strings,
+                "strings_per_segment": self.segments.strings_per_segment,
+                "cache_bytes": self.cache.capacity_bytes,
+                "batch_size": self.batch_size,
+                "num_buckets": self.num_buckets}
+        meta.update(extra)
+        return meta
+
+    def save(self, dir_path: str) -> None:
+        """Persist dictionary artifact + compressed corpus + store config so
+        :meth:`open` serves identical results without retraining."""
+        os.makedirs(dir_path, exist_ok=True)
+        self.artifact.save(os.path.join(dir_path, self._DICT_FILE))
+        self.corpus.save(os.path.join(dir_path, self._CORPUS_FILE))
+        write_json_atomic(os.path.join(dir_path, self._META_FILE),
+                          self.store_meta())
+
+    @classmethod
+    def open_corpus_dir(cls, dir_path: str, source,
+                        mmap: bool = True, **overrides) -> "CompressedStringStore":
+        """Open a directory holding corpus.rpc + store.json against an
+        already-loaded artifact or codec (shared-dictionary layouts:
+        sharding opens N corpora against one dictionary)."""
+        with open(os.path.join(dir_path, cls._META_FILE)) as f:
+            meta = json.load(f)
+        corpus = CompressedCorpus.load(
+            os.path.join(dir_path, cls._CORPUS_FILE), mmap=mmap)
+        kw = {k: meta[k] for k in cls._STORE_KW}
+        kw.update(overrides)
+        return cls(source, corpus, **kw)
+
+    @classmethod
+    def open(cls, dir_path: str, mmap: bool = True,
+             **overrides) -> "CompressedStringStore":
+        """Open a saved store: mmap the artifact + corpus, no retraining.
+        ``overrides`` replace saved construction params (e.g. ``backend=``)."""
+        artifact = DictArtifact.load(
+            os.path.join(dir_path, cls._DICT_FILE), mmap=mmap)
+        return cls.open_corpus_dir(dir_path, artifact, mmap=mmap, **overrides)
 
     # ---------------------------------------------------------------- queries
     @property
