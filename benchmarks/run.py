@@ -137,6 +137,23 @@ def bench_store(size_mib: int) -> None:
               f"per={r['latency_per']}")
 
 
+def bench_ingest(size_mib: int) -> None:
+    """Write path: frozen-dictionary appends + drift-triggered compaction."""
+    from benchmarks.store_bench import store_ingest_bench
+    rows = store_ingest_bench(size_mib)
+    _dump("ingest", rows)
+    for r in rows:
+        us = r["total_s"] / max(1, r["n_strings"]) * 1e6
+        derived = f"strings_s={r['strings_per_s']}"
+        if "mib_s" in r:
+            derived += f";mib_s={r['mib_s']}"
+        if "ratio_after" in r:
+            derived += (f";ratio_before={r['ratio_before']};"
+                        f"ratio_after={r['ratio_after']};"
+                        f"drift={r['drift_at_trigger']}")
+        _emit(f"ingest/{r['dataset']}/{r['op']}", us, derived)
+
+
 def bench_persist(size_mib: int) -> None:
     """Artifact save/load + store.open latency vs retrain-from-scratch."""
     from benchmarks.persist_bench import persist_bench
@@ -172,6 +189,7 @@ ALL = {
     "figures": bench_figures,
     "kernels": bench_kernels,
     "store": bench_store,
+    "ingest": bench_ingest,
     "persist": bench_persist,
     "roofline": bench_roofline,
 }

@@ -79,3 +79,69 @@ def store_multiget_bench(size_mib: int, n_queries: int = 20000,
             r["jit_shapes"] = [list(x) for x in sorted(s.stats.jit_shapes)]
             rows.append(r)
     return rows
+
+
+def store_ingest_bench(size_mib: int, seed: int = 0,
+                       dataset_name: str = "urls",
+                       drift_dataset: str = "book_titles") -> list[dict]:
+    """Write-path benchmark: frozen-dictionary append throughput (single and
+    Encoder-batched), seal cost amortisation, and a full drift->compact
+    cycle (append a different distribution until the monitor trips, then
+    time the re-train + rewrite and report the ratio recovery)."""
+    from repro.store.mutable import MutableStringStore
+    from repro.core import registry
+
+    strings = dataset(dataset_name, size_mib << 20)
+    half = len(strings) // 2
+    base, incoming = strings[:half], strings[half:]
+    art = registry.train("onpair16", base,
+                         sample_bytes=min(size_mib, 4) << 20, seed=seed)
+    codec = registry.codec_from_artifact(art)  # tables built once, shared
+    rows: list[dict] = []
+
+    def build() -> MutableStringStore:
+        return MutableStringStore((art, codec), codec.compress(base),
+                                  strings_per_segment=4096, cache_bytes=0,
+                                  drift_threshold=0.2)
+
+    # single-string appends (per-call parse + tail update)
+    store = build()
+    one_by_one = incoming[: min(5000, len(incoming))]
+    t0 = time.perf_counter()
+    for s in one_by_one:
+        store.append(s)
+    dt = time.perf_counter() - t0
+    raw = sum(len(s) for s in one_by_one)
+    rows.append({"dataset": dataset_name, "op": "append",
+                 "n_strings": len(one_by_one), "total_s": round(dt, 4),
+                 "strings_per_s": round(len(one_by_one) / dt, 1),
+                 "mib_s": round(throughput_mib_s(raw, dt), 2)})
+
+    # batched appends (one Encoder pass per batch, seals amortised)
+    store = build()
+    t0 = time.perf_counter()
+    for k in range(0, len(incoming), 1024):
+        store.extend(incoming[k : k + 1024])
+    dt = time.perf_counter() - t0
+    raw = sum(len(s) for s in incoming)
+    rows.append({"dataset": dataset_name, "op": "extend-1024",
+                 "n_strings": len(incoming), "total_s": round(dt, 4),
+                 "strings_per_s": round(len(incoming) / dt, 1),
+                 "mib_s": round(throughput_mib_s(raw, dt), 2),
+                 "n_segments": store.segments.n_segments,
+                 "tail": store.stats_snapshot()["n_tail_strings"]})
+
+    # drift -> compact cycle: append a different distribution, then rewrite
+    drifted = dataset(drift_dataset, min(size_mib, 2) << 20)
+    store.extend(drifted)
+    snap = store.drift.snapshot()
+    report = store.compact()
+    rows.append({"dataset": f"{dataset_name}+{drift_dataset}", "op": "compact",
+                 "n_strings": report["n_strings"],
+                 "total_s": report["total_s"], "train_s": report["train_s"],
+                 "strings_per_s": round(report["n_strings"]
+                                        / max(report["total_s"], 1e-9), 1),
+                 "drift_at_trigger": snap["drift"],
+                 "ratio_before": report["ratio_before"],
+                 "ratio_after": report["ratio_after"]})
+    return rows

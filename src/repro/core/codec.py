@@ -52,16 +52,24 @@ def _check_backend(artifact: DictArtifact, backend: str):
 
 
 class Encoder:
-    """Stateless per-string encoder constructed from an artifact."""
+    """Stateless per-string encoder constructed from an artifact.
 
-    def __init__(self, artifact: DictArtifact, backend: str = "numpy"):
+    ``codec`` optionally supplies an already-built host codec for the same
+    artifact (e.g. a store's compressor) so its dictionary tables are
+    shared instead of rebuilt.
+    """
+
+    def __init__(self, artifact: DictArtifact, backend: str = "numpy",
+                 codec=None):
         self.artifact = artifact
         self.backend = backend
         self._device = _check_backend(artifact, backend)
         # the host codec (and its PackedDictionary rebuild) is only needed on
         # the numpy path; the pallas path decodes through the device tables
-        self._codec = (registry.codec_from_artifact(artifact)
-                       if self._device is None else None)
+        self._codec = None
+        if self._device is None:
+            self._codec = (codec if codec is not None
+                           else registry.codec_from_artifact(artifact))
 
     def encode(self, strings: list[bytes]) -> CompressedCorpus:
         """Compress every string independently into one corpus."""

@@ -18,9 +18,11 @@ from __future__ import annotations
 
 import json
 import os
+import threading
 
 from repro.core import registry
 from repro.core.artifact import DictArtifact
+from repro.store.mutable import MutableStringStore
 from repro.store.store import CompressedStringStore, write_json_atomic
 
 MANIFEST = "shards.json"
@@ -68,9 +70,13 @@ def save_sharded(store: CompressedStringStore, dir_path: str,
     os.makedirs(dir_path, exist_ok=True)
     store.artifact.save(os.path.join(dir_path, DICT_FILE))
     sps = store.segments.strings_per_segment
-    bounds = plan_shards(store.n_strings, sps, n_shards)
+    # snapshot the live corpus: a writable store's construction-time corpus
+    # does not cover appended strings (sealed-tail segments or open tail)
+    corpus = store.snapshot_corpus()
+    n = corpus.n_strings
+    bounds = plan_shards(n, sps, n_shards)
     for k, (lo, hi) in enumerate(bounds):
-        sub = store.corpus.slice_strings(lo, hi)
+        sub = corpus.slice_strings(lo, hi)
         shard_dir = os.path.join(dir_path, f"shard-{k:04d}")
         os.makedirs(shard_dir, exist_ok=True)
         sub.save(os.path.join(shard_dir, CompressedStringStore._CORPUS_FILE))
@@ -80,23 +86,37 @@ def save_sharded(store: CompressedStringStore, dir_path: str,
     write_json_atomic(
         os.path.join(dir_path, MANIFEST),
         {"format_version": 1, "codec": store.artifact.codec,
-         "n_shards": len(bounds), "n_strings": store.n_strings,
+         "n_shards": len(bounds), "n_strings": n,
          "bounds": [list(b) for b in bounds],
          "strings_per_segment": sps})
     return bounds
 
 
 def open_shard(dir_path: str, shard: int, mmap: bool = True,
-               source=None, **overrides) -> CompressedStringStore:
+               source=None, writable: bool = False,
+               **overrides) -> CompressedStringStore:
     """What one serving host does: shared dictionary + its shard's corpus.
     Pass ``source`` (a loaded artifact or codec) when opening several
-    shards so the dictionary loads — and its decode tables rebuild — once."""
+    shards so the dictionary loads — and its decode tables rebuild — once.
+    ``writable=True`` opens the shard as a :class:`MutableStringStore` so it
+    accepts appends against the shared frozen dictionary; once a writable
+    shard has been saved or compacted it owns a *versioned* layout (and its
+    own dictionary generation), which takes precedence on reopen."""
+    shard_dir = os.path.join(dir_path, f"shard-{shard:04d}")
+    if CompressedStringStore._resolve_current(shard_dir) != shard_dir:
+        if not writable:  # read-only open of the shard's current generation
+            return CompressedStringStore.open(shard_dir, mmap=mmap,
+                                              **overrides)
+        return MutableStringStore.open(shard_dir, mmap=mmap, **overrides)
     if source is None:
-        source = DictArtifact.load(os.path.join(dir_path, DICT_FILE),
-                                   mmap=mmap)
-    return CompressedStringStore.open_corpus_dir(
-        os.path.join(dir_path, f"shard-{shard:04d}"), source,
-        mmap=mmap, **overrides)
+        art = DictArtifact.load(os.path.join(dir_path, DICT_FILE), mmap=mmap)
+        source = (art, registry.codec_from_artifact(art))
+    store_cls = MutableStringStore if writable else CompressedStringStore
+    store = store_cls.open_corpus_dir(shard_dir, source, mmap=mmap,
+                                      **overrides)
+    if writable:
+        store._dir = shard_dir  # compact() rewrites land in the shard dir
+    return store
 
 
 class ShardedStringStore:
@@ -108,25 +128,44 @@ class ShardedStringStore:
     """
 
     def __init__(self, stores: list[CompressedStringStore],
-                 bounds: list[tuple[int, int]]):
+                 bounds: list[tuple[int, int]],
+                 dir_path: str | None = None):
         if len(stores) != len(bounds):
             raise ValueError("one store per shard bound required")
         self.stores = stores
         self.bounds = [tuple(b) for b in bounds]
         self.n_strings = bounds[-1][1] if bounds else 0
+        self._dir = dir_path
+        self._write_lock = threading.Lock()  # serialises bound updates
 
     @classmethod
-    def open(cls, dir_path: str, mmap: bool = True,
+    def open(cls, dir_path: str, mmap: bool = True, writable: bool = False,
              **overrides) -> "ShardedStringStore":
         with open(os.path.join(dir_path, MANIFEST)) as f:
             manifest = json.load(f)
         artifact = DictArtifact.load(os.path.join(dir_path, DICT_FILE),
                                      mmap=mmap)
         codec = registry.codec_from_artifact(artifact)  # one table rebuild
-        stores = [open_shard(dir_path, k, mmap=mmap, source=codec,
-                             **overrides)
+        stores = [open_shard(dir_path, k, mmap=mmap,
+                             source=(artifact, codec),
+                             writable=writable, **overrides)
                   for k in range(manifest["n_shards"])]
-        return cls(stores, [tuple(b) for b in manifest["bounds"]])
+        bounds = [tuple(b) for b in manifest["bounds"]]
+        # the LAST shard owns the growing end of the global id space: its
+        # bound extends to cover appends saved after the manifest was
+        # written. Any other shard disagreeing with the manifest would
+        # silently renumber every id behind it — refuse instead.
+        for k, store in enumerate(stores):
+            lo, hi = bounds[k]
+            if store.n_strings != hi - lo:
+                if k < len(stores) - 1:
+                    raise ValueError(
+                        f"shard {k} holds {store.n_strings} strings but the "
+                        f"manifest bounds say {hi - lo}: only the last shard "
+                        "may grow — appends must route through "
+                        "ShardedStringStore.extend, not a non-tail shard")
+                bounds[k] = (lo, lo + store.n_strings)
+        return cls(stores, bounds, dir_path=dir_path)
 
     def route(self, gid: int) -> tuple[int, int]:
         if not 0 <= gid < self.n_strings:
@@ -154,3 +193,69 @@ class ShardedStringStore:
             for p, v in zip(positions, got):
                 out[p] = v
         return out  # type: ignore[return-value]
+
+    # ------------------------------------------------------------------ writes
+    def _writable_tail_store(self):
+        store = self.stores[-1]
+        if not hasattr(store, "extend"):
+            raise TypeError("shards are read-only; reopen with "
+                            "ShardedStringStore.open(dir, writable=True)")
+        return store
+
+    def append(self, s: bytes) -> int:
+        return self.extend([s])[0]
+
+    def extend(self, strings: list[bytes]) -> list[int]:
+        """Route appends to the owning shard. New ids extend the global id
+        space, which is owned by the LAST shard (bounds are contiguous), so
+        that is where appended strings land — the same decision a multi-host
+        deployment's router makes before forwarding the write."""
+        store = self._writable_tail_store()
+        # read-modify-write of bounds/n_strings must serialise: two racing
+        # extends could otherwise publish a count below acknowledged ids
+        with self._write_lock:
+            lo, _ = self.bounds[-1]
+            locals_ = store.extend(strings)
+            self.bounds[-1] = (lo, lo + store.n_strings)
+            self.n_strings = self.bounds[-1][1]
+        return [lo + i for i in locals_]
+
+    def save(self) -> None:
+        """Persist every writable shard (each as a versioned layout inside
+        its shard directory) and atomically rewrite the manifest bounds —
+        without this, appends live only in memory. In-place only: the
+        sharded layout (shared dictionary + manifest + read-only shards)
+        already lives in the directory this router was opened from."""
+        target = self._dir
+        if target is None:
+            raise ValueError("no directory: this router was not opened from "
+                             "a sharded store directory (use save_sharded "
+                             "to write a new layout)")
+        # the write lock freezes bounds for the whole snapshot: a racing
+        # extend() must not slip acknowledged ids into the manifest after
+        # their shard corpus has already been written
+        with self._write_lock:
+            for k, store in enumerate(self.stores):
+                # only shards with unsaved appends/compactions rewrite their
+                # generation — untouched shards keep the shared flat layout
+                if getattr(store, "_dirty", False):
+                    store.save(os.path.join(target, f"shard-{k:04d}"))
+            with open(os.path.join(target, MANIFEST)) as f:
+                manifest = json.load(f)
+            manifest.update(n_strings=self.n_strings,
+                            bounds=[list(b) for b in self.bounds])
+            write_json_atomic(os.path.join(target, MANIFEST), manifest)
+
+    def compact(self, shard: int | None = None, **kw) -> list[dict]:
+        """Compact one shard (or all of them) in place. Each shard re-trains
+        on its own live data — after this the shards no longer share one
+        dictionary artifact, exactly as in a rolling per-host rewrite."""
+        targets = range(len(self.stores)) if shard is None else [shard]
+        reports = []
+        for k in targets:
+            store = self.stores[k]
+            if not hasattr(store, "compact"):
+                raise TypeError("shards are read-only; reopen with "
+                                "ShardedStringStore.open(dir, writable=True)")
+            reports.append(store.compact(**kw))
+        return reports

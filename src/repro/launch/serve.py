@@ -40,6 +40,14 @@ def main() -> None:
                          "store.save(dir)) instead of compressing in-process; "
                          "the store's saved dictionary artifact becomes the "
                          "tokenizer vocabulary")
+    ap.add_argument("--writable", action="store_true",
+                    help="open --store-dir as a MutableStringStore (accepts "
+                         "appends against the frozen dictionary; versioned "
+                         "directory layout)")
+    ap.add_argument("--append", nargs="*", default=None, metavar="DOC",
+                    help="append these documents to the writable store "
+                         "before serving (their new ids are also served as "
+                         "prompts); prints the drift snapshot")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=128)
     args = ap.parse_args()
@@ -53,8 +61,9 @@ def main() -> None:
         # persisted-store path: the saved dictionary artifact IS the vocab —
         # nothing is retrained, the host just opens the directory
         from repro.core import registry
-        from repro.store import CompressedStringStore
-        store = CompressedStringStore.open(args.store_dir)
+        from repro.store import CompressedStringStore, MutableStringStore
+        store_cls = MutableStringStore if args.writable else CompressedStringStore
+        store = store_cls.open(args.store_dir)
         codec = registry.resolve(store.artifact.codec)
         if codec not in ("onpair", "onpair16"):
             raise SystemExit(
@@ -69,6 +78,19 @@ def main() -> None:
     from dataclasses import replace
     cfg = replace(cfg, vocab_size=tok.vocab_size)
     params = build_params(cfg, seed=0)
+
+    if args.append:
+        # ingest path: parse new docs against the store's frozen dictionary
+        if store is None or not args.writable:
+            raise SystemExit("--append requires --store-dir with --writable")
+        new_ids = store.extend([d.encode() for d in args.append])
+        store.save(args.store_dir)  # ingest is durable, not in-memory only
+        drift = store.drift.snapshot()
+        print(f"appended {len(new_ids)} docs (ids {new_ids[0]}..{new_ids[-1]}), "
+              f"tail {store.stats_snapshot()['n_tail_strings']} strings, "
+              f"saved to {args.store_dir}, drift {drift['drift']:.3f} "
+              f"(compact recommended: {drift['should_compact']})")
+        args.doc_ids = list(args.doc_ids or []) + new_ids
 
     prompt_bytes = [p.encode() for p in args.prompts]
     if args.doc_ids:

@@ -9,7 +9,12 @@ Layered between the compression algorithms (repro.core) / device kernels
              length-bucketed static-shape Pallas decode (numpy fallback),
              plus save(dir)/open(dir) persistence over the DictArtifact +
              CompressedCorpus containers (no retraining on open)
+  mutable  — MutableStringStore: the write path — frozen-dictionary
+             append into an open tail, sealing into immutable segments,
+             drift-triggered compact() with versioned-directory swap
+  drift    — DriftMonitor: achieved vs train-time compression ratio
   service  — micro-batching request queue coalescing point lookups
+             (reads and appends share one worker)
   stats    — serving counters surfaced through repro.core.metrics
 
 Segment-sharded multi-host persistence lives in
@@ -18,10 +23,13 @@ openable store directory per shard).
 """
 
 from repro.store.cache import LRUCache
+from repro.store.drift import DriftMonitor
+from repro.store.mutable import MutableStringStore
 from repro.store.segment import Segment, SegmentedCorpus
 from repro.store.service import StoreService
 from repro.store.stats import StoreStats
 from repro.store.store import CompressedStringStore
 
-__all__ = ["CompressedStringStore", "LRUCache", "Segment", "SegmentedCorpus",
+__all__ = ["CompressedStringStore", "DriftMonitor", "LRUCache",
+           "MutableStringStore", "Segment", "SegmentedCorpus",
            "StoreService", "StoreStats"]

@@ -1,0 +1,430 @@
+"""MutableStringStore — the write path of the serving subsystem.
+
+OnPair compresses every string independently against a trained dictionary,
+so *new* strings can be parsed against a **frozen** dictionary without any
+retraining — the ingestion model of an in-memory database. The mutable
+store layers that lifecycle over :class:`CompressedStringStore`:
+
+* ``append``/``extend`` parse incoming strings with the saved-artifact
+  :class:`~repro.core.codec.Encoder` into an open **tail** (a list of
+  per-string token-stream payloads);
+* once the tail reaches ``strings_per_segment`` strings it is **sealed**
+  into the immutable :class:`~repro.store.segment.SegmentedCorpus` layout —
+  reads (`get`/`multiget`/`scan`) answer consistently across sealed + tail
+  data the whole time;
+* a :class:`~repro.store.drift.DriftMonitor` watches the achieved ratio of
+  appended data against the train-time ratio; when the distribution drifts,
+  ``compact()`` re-trains a dictionary on the live data and rewrites every
+  segment against it, swapping the store's state (and, when the store is
+  backed by a directory, a new **versioned artifact directory** via the
+  atomic-manifest pattern of ``write_json_atomic``).
+
+On disk a mutable store is a *versioned* directory::
+
+    <dir>/current.json     atomic manifest: {"current": "v0000", ...}
+    <dir>/v0000/           one flat store layout per dictionary generation
+        dictionary.rpa       (train-once artifact)
+        corpus.rpc           (sealed segments + unsealed tail strings)
+        store.json           (construction params + n_tail + drift state)
+    <dir>/v0001/           written by compact(); manifest swap is atomic
+
+``open()`` also accepts a plain read-only store directory (no manifest) so
+any persisted :class:`CompressedStringStore` can be reopened writable.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+
+import numpy as np
+
+from repro.core import registry
+from repro.core.api import CompressedCorpus
+from repro.core.artifact import DictArtifact
+from repro.core.codec import Encoder
+from repro.store.drift import DriftMonitor
+from repro.store.segment import SegmentedCorpus
+from repro.store.store import CompressedStringStore, write_json_atomic
+
+try:
+    from repro.kernels.ops import OnPairDevice
+except Exception:  # pragma: no cover - container without jax
+    OnPairDevice = None
+
+
+def _empty_corpus() -> CompressedCorpus:
+    return CompressedCorpus(payload=np.zeros(0, dtype=np.uint8),
+                            offsets=np.zeros(1, dtype=np.int64), raw_bytes=0)
+
+
+class MutableStringStore(CompressedStringStore):
+    """Appendable store over a frozen dictionary, with drift-triggered
+    compaction.
+
+    ``corpus`` may be ``None`` to start an empty store that is populated
+    purely by appends (the dictionary still comes from ``source`` — an
+    artifact trained elsewhere, or a trained codec).
+    """
+
+    def __init__(self, source, corpus: CompressedCorpus | None = None, *,
+                 drift_threshold: float = 0.2, auto_compact: bool = False,
+                 train_ratio: float | None = None, **store_kw):
+        # tail state must exist before super().__init__ — the overridden
+        # n_strings property can be consulted during construction
+        self._tail: list[bytes] = []       # compressed payload per string
+        self._tail_raw: list[int] = []     # decoded byte length per string
+        self._tail_bytes = 0
+        self._n_total = 0
+        if corpus is None:
+            corpus = _empty_corpus()
+        super().__init__(source, corpus, **store_kw)
+        self._n_total = self.segments.n_strings
+        # frozen-dict parser; shares the compressor's already-built tables
+        self._encoder = Encoder(self.artifact, codec=self.compressor)
+        self._encode_lock = threading.Lock()     # serialises lazy LPM rebuild
+        self._io_lock = threading.RLock()        # serialises save/swap/prune
+        self._dirty = False                      # unsaved appends/compacts
+        base = train_ratio if train_ratio is not None else (
+            corpus.ratio if corpus.compressed_bytes else None)
+        self.drift = DriftMonitor(threshold=drift_threshold,
+                                  baseline_ratio=base)
+        self.auto_compact = auto_compact
+        self.version_id = 0          # bumped by every compact()
+        self.compactions = 0
+        self._dir: str | None = None  # set by save()/open(): compact() target
+
+    # -------------------------------------------------------------- tail hooks
+    def _tail_n(self) -> int:
+        return len(self._tail)
+
+    def _tail_payload_bytes(self) -> int:
+        return self._tail_bytes
+
+    def _tail_string_tokens(self, local: int) -> np.ndarray:
+        return np.frombuffer(self._tail[local], dtype="<u2")
+
+    def _tail_scan(self, lo: int, hi: int) -> list[bytes]:
+        if lo >= hi:
+            return []
+        parts = self._tail[lo:hi]
+        counts = np.asarray([len(p) // 2 for p in parts], dtype=np.int64)
+        tokens = np.frombuffer(b"".join(parts), dtype="<u2").astype(np.int64)
+        decoded = self.dictionary.decode_tokens(tokens)
+        return self._split_decoded(decoded, tokens, counts)
+
+    @property
+    def n_strings(self) -> int:
+        # a plain int read: monotonic for unlocked readers even while a seal
+        # is moving strings from the tail into a new segment under the lock
+        return self._n_total
+
+    # ----------------------------------------------------------------- writes
+    def append(self, s: bytes) -> int:
+        """Parse one string against the frozen dictionary and append it.
+        Returns the new string's global id (ids are assigned contiguously)."""
+        return self.extend([s])[0]
+
+    def extend(self, strings: list[bytes]) -> list[int]:
+        """Batched append: one Encoder pass, then one locked tail update."""
+        strings = [bytes(s) for s in strings]
+        if not strings:
+            return []
+        while True:
+            with self._encode_lock:
+                version = self.version_id
+                encoder = self._encoder
+                corpus = encoder.encode(strings)
+            payloads = [corpus.string_payload(i) for i in range(len(strings))]
+            with self._lock:
+                if version == self.version_id:
+                    ids = self._ingest_locked(payloads,
+                                              [len(s) for s in strings])
+                    break
+            # a compact() swapped the dictionary while we were parsing: the
+            # payloads reference the OLD token table — re-parse and retry
+        if self.auto_compact and self.drift.should_compact():
+            self.compact()
+        return ids
+
+    def seal(self) -> None:
+        """Force-seal the current tail into a (possibly short) segment."""
+        with self._lock:
+            self._seal_tail_locked()
+
+    def _ingest_locked(self, payloads: list[bytes], raw_lens: list[int],
+                       assign_ids: bool = True) -> list[int]:
+        """``assign_ids=False`` re-files payloads whose ids are already
+        published (compact's delta re-parse) without touching ``_n_total``."""
+        self._dirty = True
+        ids = []
+        for payload, raw in zip(payloads, raw_lens):
+            self._tail.append(payload)
+            self._tail_raw.append(raw)
+            self._tail_bytes += len(payload)
+            self.drift.observe(raw, len(payload))
+            if assign_ids:
+                ids.append(self._n_total)
+                self._n_total += 1
+            if len(self._tail) >= self.segments.strings_per_segment:
+                self._seal_tail_locked()
+        return ids
+
+    def _seal_tail_locked(self) -> None:
+        if not self._tail:
+            return
+        offsets = np.zeros(len(self._tail) + 1, dtype=np.int64)
+        np.cumsum([len(p) for p in self._tail], out=offsets[1:])
+        payload = np.frombuffer(b"".join(self._tail), dtype=np.uint8)
+        self.segments.append_segment(payload, offsets,
+                                     raw_bytes=sum(self._tail_raw))
+        self._tail.clear()
+        self._tail_raw.clear()
+        self._tail_bytes = 0
+
+    # ------------------------------------------------------------- compaction
+    def compact(self, *, sample_strings: int | None = None,
+                dir_path: str | None = None, prune_old: bool = True) -> dict:
+        """Re-train the dictionary on (a sample of) the live data, re-encode
+        every live string, and atomically swap the store's state.
+
+        Training and bulk re-encoding run *outside* the store lock — reads
+        and appends keep being served from the old state; strings appended
+        meanwhile are re-parsed against the new dictionary during the final
+        locked swap. When the store is directory-backed (``save``/``open``),
+        the rewrite lands in a new ``v{n+1}`` subdirectory and the
+        ``current.json`` manifest is swapped atomically; stale version
+        directories are pruned afterwards (``prune_old=False`` keeps them).
+        """
+        t0 = time.perf_counter()
+        n0 = self.n_strings
+        # decode the live data in per-segment lock windows — ids < n0 are
+        # immutable, so chunked reads see the same bytes as one big scan
+        # while concurrent reads/appends keep interleaving
+        live: list[bytes] = []
+        chunk = max(1, self.segments.strings_per_segment)
+        for lo in range(0, n0, chunk):
+            with self._lock:
+                live.extend(self._scan_locked(lo, min(lo + chunk, n0)))
+        if not live:
+            return {"n_strings": 0, "ratio_before": 0.0, "ratio_after": 0.0,
+                    "train_s": 0.0, "total_s": 0.0,
+                    "version": self._version_name(), "dir": self._dir}
+        raw = sum(len(s) for s in live)
+        with self._lock:
+            compressed_before = (self.segments.payload_bytes
+                                 + self._tail_bytes)
+        ratio_before = raw / max(1, compressed_before)
+
+        # re-train on a sample of live data (the codec's own sample_bytes
+        # cap still applies inside train())
+        sample = live
+        if sample_strings is not None and sample_strings < len(live):
+            step = max(1, len(live) // sample_strings)
+            sample = live[::step][:sample_strings]
+        new_comp = registry.codec_from_artifact(self.artifact)
+        t_train0 = time.perf_counter()
+        new_comp.train(sample)
+        train_s = time.perf_counter() - t_train0
+        new_corpus = new_comp.compress(live)
+        # artifact freeze and device-table upload both happen OUTSIDE the
+        # lock — the locked swap only assigns
+        new_artifact = new_comp.to_artifact()
+        new_device = (OnPairDevice(new_comp.dictionary)
+                      if self.backend == "jax" else None)
+
+        with self._lock:
+            # strings appended while we were retraining: decode them from
+            # the old state, then re-parse against the new dictionary. Their
+            # ids are already published, so _n_total never moves — lock-free
+            # n_strings readers stay monotonic through the whole swap
+            delta = self._scan_locked(n0, self._n_total)
+            self._swap_state_locked(new_comp, new_corpus, new_artifact,
+                                    new_device)
+            if delta:
+                d_corpus = new_comp.compress(delta)
+                self._ingest_locked(
+                    [d_corpus.string_payload(i) for i in range(len(delta))],
+                    [len(s) for s in delta], assign_ids=False)
+            compressed_after = self.segments.payload_bytes + self._tail_bytes
+        self.compactions += 1
+
+        target = dir_path or self._dir
+        old_version = f"v{self.version_id - 1:04d}"
+        if target is not None:
+            # one holder writes the directory at a time: a concurrent save()
+            # must not recreate (or point the manifest at) the generation
+            # this prune is deleting
+            with self._io_lock:
+                self.save(target)  # writes v{id}/ then swaps current.json
+                if prune_old:
+                    shutil.rmtree(os.path.join(target, old_version),
+                                  ignore_errors=True)
+        raw_total = raw + sum(len(s) for s in delta)
+        return {"n_strings": self.n_strings,
+                "ratio_before": round(ratio_before, 4),
+                "ratio_after": round(raw_total / max(1, compressed_after), 4),
+                "train_s": round(train_s, 4),
+                "total_s": round(time.perf_counter() - t0, 4),
+                "version": f"v{self.version_id:04d}",
+                "dir": target}
+
+    def _swap_state_locked(self, compressor, corpus: CompressedCorpus,
+                           artifact: DictArtifact | None = None,
+                           device=None) -> None:
+        """Replace dictionary + corpus + segments in one locked step. Decoded
+        values are unchanged byte-for-byte, but cached entries belong to the
+        rewritten segments' old token streams — drop them all. Pass the
+        pre-frozen ``artifact`` so the token table is not re-serialized
+        while every reader and writer is blocked on the lock."""
+        self.compressor = compressor
+        self._artifact = artifact           # re-frozen lazily when None
+        self.dictionary = compressor.dictionary
+        self.corpus = corpus
+        self.segments = SegmentedCorpus.from_corpus(
+            corpus, self.segments.strings_per_segment)
+        self._set_bucket_caps(corpus.token_counts())
+        if self.backend == "jax":
+            self._device = (device if device is not None
+                            else OnPairDevice(self.dictionary))
+        self._encoder = Encoder(self.artifact, codec=self.compressor)
+        self._dirty = True
+        self._tail = []
+        self._tail_raw = []
+        self._tail_bytes = 0
+        # _n_total is deliberately NOT reset: acknowledged ids must never
+        # un-publish, and the caller re-files any delta beyond the corpus
+        self.cache.clear()
+        self.drift.reset(corpus.ratio if corpus.compressed_bytes else None)
+        self.version_id += 1
+
+    # ------------------------------------------------------------- persistence
+    def _version_name(self) -> str:
+        return f"v{self.version_id:04d}"
+
+    def snapshot_corpus(self) -> CompressedCorpus:
+        with self._lock:
+            return self._to_corpus_locked()
+
+    def _to_corpus_locked(self) -> CompressedCorpus:
+        """One flat CompressedCorpus over sealed segments + unsealed tail."""
+        parts = [s.payload for s in self.segments.segments]
+        parts += [np.frombuffer(p, dtype=np.uint8) for p in self._tail]
+        payload = (np.concatenate(parts) if parts
+                   else np.zeros(0, dtype=np.uint8))
+        offs = [np.zeros(1, dtype=np.int64)]
+        base = 0
+        for seg in self.segments.segments:
+            if seg.n_strings:
+                offs.append(seg.offsets[1:] + base)
+            base += seg.payload_bytes
+        for p in self._tail:
+            base += len(p)
+            offs.append(np.asarray([base], dtype=np.int64))
+        raw = self.segments.raw_bytes + sum(self._tail_raw)
+        return CompressedCorpus(payload=payload,
+                                offsets=np.concatenate(offs),
+                                raw_bytes=int(raw),
+                                meta={"compressor": self.compressor.name})
+
+    def save(self, dir_path: str) -> None:
+        """Write the current dictionary generation as ``<dir>/v{id}/`` (flat
+        store layout, tail included in the corpus) and atomically point the
+        ``current.json`` manifest at it.
+
+        Dictionary, corpus, version name and meta are all snapshotted in ONE
+        locked section — a compact() landing mid-save must never pair the
+        new dictionary with the old generation's corpus on disk — and the
+        whole snapshot+write sequence holds the IO lock, so it serialises
+        against compact()'s own save+prune (a stale generation is never
+        recreated after its prune, and the manifest never points backwards).
+        """
+        with self._io_lock:
+            self._save_io_locked(dir_path)
+
+    def _save_io_locked(self, dir_path: str) -> None:
+        with self._lock:
+            vname = self._version_name()
+            artifact = self.artifact
+            corpus = self._to_corpus_locked()
+            meta = self.store_meta(
+                mutable=True, n_tail=len(self._tail),
+                version_id=self.version_id,
+                train_ratio=self.drift.baseline_ratio,
+                drift_raw_bytes=self.drift.raw_bytes,
+                drift_compressed_bytes=self.drift.compressed_bytes,
+                drift_observations=self.drift.observations,
+                drift_threshold=self.drift.threshold)
+            manifest = {"format_version": 1, "current": vname,
+                        "codec": artifact.codec, "n_strings": self.n_strings,
+                        "compactions": self.compactions}
+            # cleared HERE, inside the snapshot's locked section: an append
+            # landing while the files below are written re-marks the store
+            # dirty and is not covered by this snapshot
+            self._dirty = False
+        sub = os.path.join(dir_path, vname)
+        os.makedirs(sub, exist_ok=True)
+        artifact.save(os.path.join(sub, self._DICT_FILE))
+        corpus.save(os.path.join(sub, self._CORPUS_FILE))
+        write_json_atomic(os.path.join(sub, self._META_FILE), meta)
+        write_json_atomic(os.path.join(dir_path, self._CURRENT_FILE),
+                          manifest)
+        # when upgrading a plain (flat) store directory to the versioned
+        # layout, drop the superseded flat files: a reader must never find
+        # two generations disagreeing in one directory
+        for name in (self._DICT_FILE, self._CORPUS_FILE, self._META_FILE):
+            stale = os.path.join(dir_path, name)
+            if os.path.exists(stale):
+                os.remove(stale)
+        self._dir = dir_path
+
+    @classmethod
+    def open(cls, dir_path: str, mmap: bool = True,
+             **overrides) -> "MutableStringStore":
+        """Reopen a mutable store: versioned layout (``current.json``) or a
+        plain read-only store directory. An unsealed tail saved with the
+        corpus is split back out so appends keep sealing on the same
+        boundaries."""
+        sub = cls._resolve_current(dir_path)
+        with open(os.path.join(sub, cls._META_FILE)) as f:
+            meta = json.load(f)
+        artifact = DictArtifact.load(os.path.join(sub, cls._DICT_FILE),
+                                     mmap=mmap)
+        corpus = CompressedCorpus.load(os.path.join(sub, cls._CORPUS_FILE),
+                                       mmap=mmap)
+        n, n_tail = corpus.n_strings, int(meta.get("n_tail", 0))
+        sealed = corpus.slice_strings(0, n - n_tail) if n_tail else corpus
+        kw = {k: meta[k] for k in cls._STORE_KW}
+        kw["train_ratio"] = meta.get("train_ratio")
+        kw["drift_threshold"] = meta.get("drift_threshold", 0.2)
+        kw.update(overrides)  # caller overrides beat every saved param
+        store = cls(artifact, sealed, **kw)
+        if n_tail:
+            lens = store.dictionary.lens
+            payloads, raws = [], []
+            for i in range(n - n_tail, n):
+                toks = np.asarray(corpus.string_tokens(i), dtype=np.int64)
+                payloads.append(corpus.string_payload(i))
+                raws.append(int(lens[toks].astype(np.int64).sum()))
+            with store._lock:
+                store._ingest_locked(payloads, raws)
+        # restore the drift window exactly as saved (the tail re-ingest above
+        # re-observed only the tail; overwrite with the persisted counters)
+        if "drift_raw_bytes" in meta:
+            store.drift.raw_bytes = int(meta["drift_raw_bytes"])
+            store.drift.compressed_bytes = int(meta["drift_compressed_bytes"])
+            store.drift.observations = int(meta["drift_observations"])
+        store.version_id = int(meta.get("version_id", 0))
+        store._dir = dir_path
+        store._dirty = False   # tail restore above is not an unsaved append
+        return store
+
+    # ------------------------------------------------------------------ stats
+    def stats_snapshot(self) -> dict:
+        snap = super().stats_snapshot()
+        snap.update(drift=self.drift.snapshot(), compactions=self.compactions,
+                    version=self._version_name())
+        return snap

@@ -4,13 +4,18 @@ A :class:`SegmentedCorpus` splits one :class:`~repro.core.api.CompressedCorpus`
 into fixed-size segments of consecutive strings. Each segment carries a
 zero-copy payload view plus *segment-local* byte offsets, and global string
 ids route as ``gid -> (segment, local)``. Segments are the store's unit of
-scan decoding today and the unit of sharding/replication for a future
-distributed store (see ROADMAP: sharded segments over ``repro.distributed``).
+scan decoding, the unit of sharding (``repro.distributed.shard_store``), and
+the unit the writable store seals appended tails into
+(``repro.store.mutable``): sealed segments may therefore have heterogeneous
+sizes (the seed corpus's last segment can be partial before the first sealed
+tail lands behind it), so routing bisects the segments' base ids instead of
+dividing by a fixed width.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+import bisect
+from dataclasses import dataclass, field
 
 import numpy as np
 
@@ -58,6 +63,10 @@ class SegmentedCorpus:
     strings_per_segment: int
     n_strings: int
     raw_bytes: int
+    _base_ids: list[int] = field(default_factory=list, repr=False)
+
+    def __post_init__(self) -> None:
+        self._base_ids = [s.base_id for s in self.segments]
 
     @classmethod
     def from_corpus(cls, corpus: CompressedCorpus,
@@ -82,6 +91,30 @@ class SegmentedCorpus:
         return cls(segments=segments, strings_per_segment=strings_per_segment,
                    n_strings=n, raw_bytes=corpus.raw_bytes)
 
+    # ------------------------------------------------------------- mutation
+    def append_segment(self, payload: np.ndarray, offsets: np.ndarray,
+                       raw_bytes: int = 0) -> Segment:
+        """Seal a new segment of compressed strings behind the existing ones.
+
+        ``payload``/``offsets`` use the same layout as :class:`Segment`
+        (local byte offsets into a u8 payload). The new segment's strings
+        take the next ``offsets.size - 1`` global ids. Caller synchronises
+        (the store mutates under its own lock).
+        """
+        if self.n_strings == 0 and self.segments and \
+                self.segments[0].n_strings == 0:
+            # drop the empty-corpus placeholder segment
+            self.segments = []
+            self._base_ids = []
+        seg = Segment(index=len(self.segments), base_id=self.n_strings,
+                      payload=np.asarray(payload, dtype=np.uint8),
+                      offsets=np.asarray(offsets, dtype=np.int64))
+        self.segments.append(seg)
+        self._base_ids.append(seg.base_id)
+        self.n_strings += seg.n_strings
+        self.raw_bytes += int(raw_bytes)
+        return seg
+
     # --------------------------------------------------------------- routing
     def route(self, gid: int) -> tuple[Segment, int]:
         """Global string id -> (segment, local id). Raises IndexError when
@@ -90,8 +123,19 @@ class SegmentedCorpus:
         if not 0 <= gid < self.n_strings:
             raise IndexError(
                 f"string id {gid} out of range [0, {self.n_strings})")
-        seg = self.segments[gid // self.strings_per_segment]
+        seg = self.segments[bisect.bisect_right(self._base_ids, gid) - 1]
         return seg, gid - seg.base_id
+
+    def overlapping(self, lo: int, hi: int):
+        """Segments covering any id in [lo, hi), found by bisect — scans of
+        a narrow range touch O(covered) segments, not all of them."""
+        if lo >= hi:
+            return
+        k = max(0, bisect.bisect_right(self._base_ids, lo) - 1)
+        for seg in self.segments[k:]:
+            if seg.base_id >= hi:
+                break
+            yield seg
 
     def string_tokens(self, gid: int) -> np.ndarray:
         seg, local = self.route(gid)

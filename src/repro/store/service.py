@@ -7,6 +7,13 @@ single worker thread drains the request queue, waits up to ``max_wait_s``
 for the batch to fill (classic micro-batching latency/throughput knob), and
 answers the whole batch with ONE ``store.multiget`` — one padded kernel
 invocation per touched length bucket.
+
+Writes ride the same queue: against a
+:class:`~repro.store.mutable.MutableStringStore`, ``submit_append(s)``
+enqueues a string and the worker folds every append in the drained batch
+into ONE ``store.extend`` (one Encoder parse pass) before answering the
+batch's reads — appends and reads interleave without torn state because the
+store itself serialises both under its lock.
 """
 
 from __future__ import annotations
@@ -39,6 +46,8 @@ class StoreService:
         self.batches = 0
         self.coalesced = 0          # requests answered in a batch of > 1
         self.max_batch_seen = 0
+        self.appends = 0
+        self.append_batches = 0     # store.extend calls (coalesced writes)
         self._worker = threading.Thread(target=self._run, daemon=True,
                                         name="store-service")
         self._worker.start()
@@ -63,11 +72,34 @@ class StoreService:
                 fut.set_exception(RuntimeError("service is closed"))
                 return fut
             self.requests += 1
-            self._q.put((i, fut, time.perf_counter()))
+            self._q.put(("get", i, fut, time.perf_counter()))
+        return fut
+
+    def submit_append(self, s: bytes) -> "Future[int]":
+        """Enqueue an append; resolves to the new string's global id.
+
+        Requires the store to be writable (``MutableStringStore.extend``);
+        otherwise the future fails with TypeError. All appends drained into
+        one batch are folded into a single ``store.extend`` call.
+        """
+        fut: Future = Future()
+        if not hasattr(self.store, "extend"):
+            fut.set_exception(TypeError(
+                "store is read-only (open a MutableStringStore to append)"))
+            return fut
+        with self._submit_lock:
+            if self._stop.is_set():
+                fut.set_exception(RuntimeError("service is closed"))
+                return fut
+            self.requests += 1
+            self._q.put(("append", bytes(s), fut, time.perf_counter()))
         return fut
 
     def get(self, i: int, timeout: float | None = 30.0) -> bytes:
         return self.submit(i).result(timeout)
+
+    def append(self, s: bytes, timeout: float | None = 30.0) -> int:
+        return self.submit_append(s).result(timeout)
 
     def multiget(self, ids, timeout: float | None = 30.0) -> list[bytes]:
         futures = [self.submit(i) for i in ids]
@@ -93,6 +125,8 @@ class StoreService:
                 "avg_batch": round(self.requests / self.batches, 2)
                 if self.batches else 0.0,
                 "max_batch_seen": self.max_batch_seen,
+                "appends": self.appends,
+                "append_batches": self.append_batches,
                 "request_latency": lat}
 
     # ----------------------------------------------------------------- worker
@@ -123,7 +157,7 @@ class StoreService:
             except queue.Empty:
                 return
             if item is not None:
-                item[1].set_exception(RuntimeError("service is closed"))
+                item[2].set_exception(RuntimeError("service is closed"))
 
     def _run(self) -> None:
         while True:
@@ -140,20 +174,36 @@ class StoreService:
                     return
                 continue
             batch = self._collect_batch(item)
-            ids = [i for i, _, _ in batch]
-            try:
-                values = self.store.multiget(ids)
-            except Exception as exc:  # fail the whole batch, keep serving
-                for _, fut, _ in batch:
-                    fut.set_exception(exc)
-            else:
-                done = time.perf_counter()
-                with self._lat_lock:
-                    for _, _, t in batch:
-                        self._lat.record(done - t)
-                if len(batch) > 1:
-                    self.coalesced += len(batch)
-                self.batches += 1
-                self.max_batch_seen = max(self.max_batch_seen, len(batch))
-                for (_, fut, _), val in zip(batch, values):
-                    fut.set_result(val)
+            # writes first: a client holding an id from a resolved append can
+            # immediately read it back through the next batch
+            writes = [b for b in batch if b[0] == "append"]
+            reads = [b for b in batch if b[0] == "get"]
+            if writes:
+                try:
+                    new_ids = self.store.extend([s for _, s, _, _ in writes])
+                except Exception as exc:
+                    for _, _, fut, _ in writes:
+                        fut.set_exception(exc)
+                else:
+                    self.appends += len(writes)
+                    self.append_batches += 1
+                    for (_, _, fut, _), gid in zip(writes, new_ids):
+                        fut.set_result(gid)
+            if reads:
+                ids = [i for _, i, _, _ in reads]
+                try:
+                    values = self.store.multiget(ids)
+                except Exception as exc:  # fail the whole batch, keep serving
+                    for _, _, fut, _ in reads:
+                        fut.set_exception(exc)
+                else:
+                    for (_, _, fut, _), val in zip(reads, values):
+                        fut.set_result(val)
+            done = time.perf_counter()
+            with self._lat_lock:
+                for _, _, _, t in batch:
+                    self._lat.record(done - t)
+            if len(batch) > 1:
+                self.coalesced += len(batch)
+            self.batches += 1
+            self.max_batch_seen = max(self.max_batch_seen, len(batch))

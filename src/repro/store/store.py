@@ -62,9 +62,11 @@ class CompressedStringStore:
     """Queryable in-memory store over one compressed corpus.
 
     ``source`` is either a trained token-stream codec (the pre-v2 calling
-    convention) or a serialized :class:`DictArtifact` — the store is exactly
+    convention), a serialized :class:`DictArtifact` — the store is exactly
     the consumer the artifact split exists for: open a dictionary that was
-    trained elsewhere and serve, no trainer state required.
+    trained elsewhere and serve, no trainer state required — or an
+    ``(artifact, codec)`` pair when both are already loaded (shared-
+    dictionary layouts open N stores without N table or artifact rebuilds).
     """
 
     def __init__(self, source, corpus: CompressedCorpus,
@@ -72,8 +74,11 @@ class CompressedStringStore:
                  cache_bytes: int = 8 << 20, batch_size: int = 256,
                  num_buckets: int = 4, backend: str = "auto",
                  use_pallas: bool = True):
-        if isinstance(source, DictArtifact):
-            self._artifact: DictArtifact | None = source
+        self._artifact: DictArtifact | None
+        if isinstance(source, tuple):
+            self._artifact, compressor = source
+        elif isinstance(source, DictArtifact):
+            self._artifact = source
             compressor = registry.codec_from_artifact(source)
         else:
             self._artifact = None
@@ -113,18 +118,20 @@ class CompressedStringStore:
             raise ValueError(f"unknown backend {backend!r}")
         self.backend = backend
         self._device = OnPairDevice(self.dictionary) if backend == "jax" else None
+        self._set_bucket_caps(corpus.token_counts())
 
-        # ----- length buckets: static token capacities from corpus quantiles
-        counts = corpus.token_counts()
+    def _set_bucket_caps(self, counts: np.ndarray) -> None:
+        """Length buckets: static token capacities from corpus quantiles."""
         if counts.size == 0:
             caps = [8]
         else:
-            qs = _BUCKET_QUANTILES[-num_buckets:]
+            qs = _BUCKET_QUANTILES[-self.num_buckets:]
             caps = sorted({_ceil8(np.quantile(counts, q)) for q in qs})
             max_count = int(counts.max())
             if caps[-1] < max_count:
                 caps.append(_ceil8(max_count))
-                caps = caps[-num_buckets:] if len(caps) > num_buckets else caps
+                if len(caps) > self.num_buckets:
+                    caps = caps[-self.num_buckets:]
         self.bucket_caps = np.asarray(caps, dtype=np.int64)
 
     # ------------------------------------------------------------ construction
@@ -148,6 +155,8 @@ class CompressedStringStore:
     _DICT_FILE = "dictionary.rpa"
     _CORPUS_FILE = "corpus.rpc"
     _META_FILE = "store.json"
+    #: manifest of the versioned (writable-store) directory layout
+    _CURRENT_FILE = "current.json"
     #: construction params persisted in store.json and restored by open()
     _STORE_KW = ("strings_per_segment", "cache_bytes", "batch_size",
                  "num_buckets")
@@ -158,6 +167,12 @@ class CompressedStringStore:
         if self._artifact is None:
             self._artifact = self.compressor.to_artifact()
         return self._artifact
+
+    def snapshot_corpus(self) -> CompressedCorpus:
+        """The store's full compressed payload as one corpus. The writable
+        subclass overrides this to flatten sealed segments + tail — the
+        construction-time ``self.corpus`` does not cover appended data."""
+        return self.corpus
 
     def store_meta(self, **extra) -> dict:
         """The store.json payload: codec + construction params (+ extras)."""
@@ -194,29 +209,78 @@ class CompressedStringStore:
         return cls(source, corpus, **kw)
 
     @classmethod
+    def _resolve_current(cls, dir_path: str) -> str:
+        """Follow a versioned directory's ``current.json`` manifest to its
+        current generation subdirectory; a plain flat store directory
+        resolves to itself."""
+        cur = os.path.join(dir_path, cls._CURRENT_FILE)
+        if os.path.exists(cur):
+            with open(cur) as f:
+                return os.path.join(dir_path, json.load(f)["current"])
+        return dir_path
+
+    @classmethod
     def open(cls, dir_path: str, mmap: bool = True,
              **overrides) -> "CompressedStringStore":
         """Open a saved store: mmap the artifact + corpus, no retraining.
-        ``overrides`` replace saved construction params (e.g. ``backend=``)."""
+        ``overrides`` replace saved construction params (e.g. ``backend=``).
+        A versioned (writable-store) directory opens read-only at its
+        current generation."""
+        dir_path = cls._resolve_current(dir_path)
         artifact = DictArtifact.load(
             os.path.join(dir_path, cls._DICT_FILE), mmap=mmap)
         return cls.open_corpus_dir(dir_path, artifact, mmap=mmap, **overrides)
 
+    # -------------------------------------------------------------- tail hooks
+    # A store may hold strings beyond the sealed SegmentedCorpus: the writable
+    # subclass (repro.store.mutable) keeps an open *tail* of appended strings.
+    # The read path is written against these hooks so get/multiget/scan/stats
+    # stay correct across sealed + tail data; the read-only base has no tail.
+    def _tail_n(self) -> int:
+        return 0
+
+    def _tail_payload_bytes(self) -> int:
+        return 0
+
+    def _tail_string_tokens(self, local: int) -> np.ndarray:
+        raise IndexError(f"tail string {local} does not exist "
+                         "(read-only store has no tail)")
+
+    def _tail_scan(self, lo: int, hi: int) -> list[bytes]:
+        return []
+
+    def _string_tokens(self, gid: int) -> np.ndarray:
+        """u16 token IDs of global string ``gid`` (sealed or tail).
+        Call under ``self._lock``."""
+        sealed = self.segments.n_strings
+        if gid < sealed:
+            return self.segments.string_tokens(gid)
+        return self._tail_string_tokens(gid - sealed)
+
     # ---------------------------------------------------------------- queries
     @property
-    def n_strings(self) -> int:
+    def n_sealed(self) -> int:
+        """Strings living in sealed (immutable) segments."""
         return self.segments.n_strings
+
+    @property
+    def n_strings(self) -> int:
+        return self.segments.n_strings + self._tail_n()
 
     def __len__(self) -> int:
         return self.n_strings
 
     @property
     def memory_bytes(self) -> int:
-        """Resident footprint: compressed payload + offsets + the full
-        dictionary (decode matrix and LPM tables included) + decoded-string
-        cache."""
-        return (self.corpus.compressed_bytes + self.corpus.offsets.nbytes
-                + self.dictionary.resident_bytes + self.cache.current_bytes)
+        """Resident footprint: compressed payload + offsets of every sealed
+        segment (including segments sealed from an appended tail, which the
+        construction-time corpus does not cover) + the full dictionary
+        (decode matrix and LPM tables included) + decoded-string cache + any
+        unsealed tail payload."""
+        seg_bytes = sum(s.payload_bytes + s.offsets.nbytes
+                        for s in self.segments.segments)
+        return (seg_bytes + self.dictionary.resident_bytes
+                + self.cache.current_bytes + self._tail_payload_bytes())
 
     def get(self, i: int) -> bytes:
         """Point lookup of string ``i``."""
@@ -255,28 +319,38 @@ class CompressedStringStore:
     def scan(self, lo: int, hi: int) -> list[bytes]:
         """Decode the contiguous id range [lo, hi) segment by segment: each
         segment's covered slice is one token stream, decoded in a single
-        vectorised pass and split on per-string byte boundaries."""
+        vectorised pass and split on per-string byte boundaries. Ranges may
+        extend past the sealed segments into the unsealed tail."""
         n = self.n_strings
         if not (0 <= lo <= hi <= n):
             raise IndexError(f"scan range [{lo}, {hi}) not within [0, {n}]")
-        out: list[bytes] = []
         with self._lock:
-            for seg in self.segments.segments:
-                s_lo = max(lo, seg.base_id)
-                s_hi = min(hi, seg.base_id + seg.n_strings)
-                if s_lo >= s_hi:
-                    continue
-                l0, l1 = s_lo - seg.base_id, s_hi - seg.base_id
-                tokens = np.asarray(seg.tokens(l0, l1), dtype=np.int64)
-                decoded = self.dictionary.decode_tokens(tokens)
-                counts = seg.token_counts()[l0:l1]
-                out.extend(self._split_decoded(decoded, tokens, counts))
+            out = self._scan_locked(lo, hi)
             self.stats.scan_strings += hi - lo
+        return out
+
+    def _scan_locked(self, lo: int, hi: int) -> list[bytes]:
+        out: list[bytes] = []
+        for seg in self.segments.overlapping(lo, hi):
+            s_lo = max(lo, seg.base_id)
+            s_hi = min(hi, seg.base_id + seg.n_strings)
+            if s_lo >= s_hi:
+                continue
+            l0, l1 = s_lo - seg.base_id, s_hi - seg.base_id
+            tokens = np.asarray(seg.tokens(l0, l1), dtype=np.int64)
+            decoded = self.dictionary.decode_tokens(tokens)
+            counts = seg.token_counts()[l0:l1]
+            out.extend(self._split_decoded(decoded, tokens, counts))
+        sealed = self.segments.n_strings
+        if hi > sealed:
+            out.extend(self._tail_scan(max(lo, sealed) - sealed, hi - sealed))
         return out
 
     def stats_snapshot(self) -> dict:
         snap = self.stats.snapshot(self.cache.stats())
         snap.update(backend=self.backend, n_strings=self.n_strings,
+                    n_sealed_strings=self.n_sealed,
+                    n_tail_strings=self._tail_n(),
                     n_segments=self.segments.n_segments,
                     bucket_caps=[int(c) for c in self.bucket_caps],
                     memory_bytes=self.memory_bytes)
@@ -294,7 +368,7 @@ class CompressedStringStore:
                 for k in range(len(counts))]
 
     def _decode_misses(self, misses: list[int], results: dict[int, bytes]) -> None:
-        token_lists = [np.asarray(self.segments.string_tokens(i), dtype=np.int32)
+        token_lists = [np.asarray(self._string_tokens(i), dtype=np.int32)
                        for i in misses]
         if self._device is not None:
             self._decode_jax(misses, token_lists, results)
@@ -306,6 +380,15 @@ class CompressedStringStore:
     def _decode_jax(self, misses: list[int], token_lists: list[np.ndarray],
                     results: dict[int, bytes]) -> None:
         counts = np.asarray([t.size for t in token_lists], dtype=np.int64)
+        if counts.size and int(counts.max()) > int(self.bucket_caps[-1]):
+            # appended strings can exceed every build-time bucket: grow a new
+            # top bucket instead of indexing past the table. Growth is
+            # geometric (at least 2x the previous top) so steadily longer
+            # appends mint O(log max_tokens) extra jit shapes, not one per
+            # oversized batch.
+            self.bucket_caps = np.append(
+                self.bucket_caps,
+                max(_ceil8(int(counts.max())), 2 * int(self.bucket_caps[-1])))
         buckets = np.searchsorted(self.bucket_caps, counts, side="left")
         for b in np.unique(buckets):
             cap = int(self.bucket_caps[int(b)])
