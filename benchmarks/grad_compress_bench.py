@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.distributed.compress import compressed_pmean, init_error_feedback
+from repro.distributed.compress import init_error_feedback
 from repro.distributed.sharding import use_mesh
 from repro.launch.hlo_analysis import analyze_hlo
 from repro.launch.mesh import make_production_mesh

@@ -16,8 +16,7 @@ from benchmarks.common import dataset
 from repro.core import (FSSTCompressor, OnPairCompressor, OnPairConfig,
                         make_onpair, make_onpair16)
 from repro.core.metrics import (bucket_size_histogram, cumulative_coverage,
-                                gain_by_length, gain_by_token,
-                                token_frequencies)
+                                gain_by_length, gain_by_token)
 
 
 def fig2_threshold_sweep(size_mib: int = 4, thresholds=(2, 4, 8, 12, 16, 22, 30)):

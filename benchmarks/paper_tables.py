@@ -15,11 +15,11 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import MIB, DATASET_NAMES, dataset, measure
+import numpy as np
+
+from benchmarks.common import DATASET_NAMES, MIB, dataset, measure
 from repro.core import OnPairCompressor, OnPairConfig
 from repro.core.metrics import avg_token_length
-
-import numpy as np
 
 
 def table1_dict_size_sweep(size_mib: int = 4, bits_range=range(9, 18)):

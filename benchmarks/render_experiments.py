@@ -7,10 +7,9 @@ Replaces <!-- DRYRUN_TABLE -->, <!-- ROOFLINE_BASELINE -->,
 
 from __future__ import annotations
 
-import json
 import os
 
-from repro.launch.roofline import fmt_row, load_records, roofline_fraction
+from repro.launch.roofline import fmt_row, load_records
 
 ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
 
@@ -34,7 +33,7 @@ def dryrun_table() -> str:
             f"| {key[0]} | {key[1]} | ok | {'ok' if m else 'pending'} | "
             f"{gib:.2f} | {s.get('compile_s', 0):.0f} |")
     lines.append(f"\n{len(single)}/34 single-pod and {len(multi)}/34 "
-                 f"multi-pod cells compiled (tag=final).")
+                 "multi-pod cells compiled (tag=final).")
     return "\n".join(lines)
 
 

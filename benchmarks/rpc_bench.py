@@ -1,0 +1,135 @@
+"""RPC serving benchmark: loopback multi-process routing vs in-process.
+
+What the socket hop costs: the same sharded directory is served once
+through the in-process ``ShardedStringStore`` and once through N spawned
+``repro.net`` shard-server processes behind a ``DistributedStringStore``,
+and both run the same workloads — batched ``multiget`` (throughput +
+per-batch tail latency), single ``get`` (request tail latency), and
+Encoder-batched ``extend`` (append throughput). Child processes run with
+``REPRO_NO_JAX=1``: the RPC tier is the numpy-host serving story, and it
+keeps spawn time out of the measurement window.
+
+Emits the harness JSON schema (list of row dicts under results/bench).
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import shutil
+import subprocess
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import dataset
+from repro.core.metrics import latency_summary
+from repro.distributed import ShardedStringStore, save_sharded
+from repro.store import CompressedStringStore
+
+_SRC = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"
+)
+
+
+def _spawn_servers(dir_path: str, n_shards: int):
+    env = {**os.environ, "PYTHONPATH": _SRC, "REPRO_NO_JAX": "1"}
+    procs, addrs = [], []
+    for k in range(n_shards):
+        proc = subprocess.Popen(
+            [sys.executable, "-m", "repro.net",
+             os.path.join(dir_path, f"shard-{k:04d}")],
+            stdout=subprocess.PIPE, stderr=subprocess.DEVNULL, text=True,
+            env=env)
+        line = proc.stdout.readline()
+        m = re.search(r"SHARD_SERVER_READY port=(\d+)", line)
+        if not m:
+            for p in procs:
+                p.terminate()
+            proc.terminate()
+            raise RuntimeError(f"shard server {k} never became ready: {line!r}")
+        procs.append(proc)
+        addrs.append(("127.0.0.1", int(m.group(1))))
+    return procs, addrs
+
+
+def _time_batches(fn, batches) -> list[float]:
+    out = []
+    for b in batches:
+        t0 = time.perf_counter()
+        fn(b)
+        out.append(time.perf_counter() - t0)
+    return out
+
+
+def rpc_bench(size_mib: int, n_queries: int = 5000, batch: int = 256,
+              n_singles: int = 1000, n_shards: int = 3, seed: int = 0,
+              dataset_name: str = "book_titles") -> list[dict]:
+    strings = dataset(dataset_name, size_mib << 20)
+    store = CompressedStringStore.build(
+        strings, sample_bytes=min(size_mib, 4) << 20, seed=seed)
+    dir_path = tempfile.mkdtemp(prefix="rpc_bench_")
+    rows: list[dict] = []
+    try:
+        save_sharded(store, dir_path, n_shards)
+        rng = np.random.default_rng(seed)
+        ids = rng.integers(0, len(strings), n_queries).tolist()
+        batches = [ids[k : k + batch] for k in range(0, len(ids), batch)]
+        singles = ids[:n_singles]
+        appends = [b"rpc-bench-append-%d " % i + strings[i % len(strings)]
+                   for i in range(2048)]
+        append_batches = [appends[k : k + 512]
+                         for k in range(0, len(appends), 512)]
+
+        def row(op: str, transport: str, lat_s: list[float], n: int,
+                per: str, rate_key: str) -> dict:
+            total = sum(lat_s)
+            lat = latency_summary(lat_s)
+            return {"dataset": dataset_name, "op": op, "transport": transport,
+                    "n": n, "n_shards": n_shards, "latency_per": per,
+                    "p50_us": round(lat["p50_us"], 2),
+                    "p99_us": round(lat["p99_us"], 2),
+                    rate_key: round(n / max(total, 1e-9), 1),
+                    "total_s": round(total, 4)}
+
+        # ---------------------------------------------------- in-process form
+        local = ShardedStringStore.open(dir_path)
+        local.multiget(ids[:batch])  # warm caches/compiles identically
+        lat = _time_batches(local.multiget, batches)
+        rows.append(row("multiget", "inproc", lat, n_queries, "batch",
+                        "lookups_per_s"))
+        lat = _time_batches(local.get, singles)
+        rows.append(row("get", "inproc", lat, n_singles, "lookup",
+                        "lookups_per_s"))
+        local_w = ShardedStringStore.open(dir_path, writable=True)
+        lat = _time_batches(local_w.extend, append_batches)
+        rows.append(row("extend-512", "inproc", lat, len(appends), "batch",
+                        "strings_per_s"))
+        # appends stay in memory (no save): the directory the servers open
+        # below is byte-identical to the one the in-process run measured
+
+        # ------------------------------------------------- multi-process form
+        from repro.net import DistributedStringStore
+
+        procs, addrs = _spawn_servers(dir_path, n_shards)
+        try:
+            dist = DistributedStringStore.connect(addrs)
+            dist.multiget(ids[:batch])  # warm connections + caches
+            lat = _time_batches(dist.multiget, batches)
+            rows.append(row("multiget", "rpc", lat, n_queries, "batch",
+                            "lookups_per_s"))
+            lat = _time_batches(dist.get, singles)
+            rows.append(row("get", "rpc", lat, n_singles, "lookup",
+                            "lookups_per_s"))
+            lat = _time_batches(dist.extend, append_batches)
+            rows.append(row("extend-512", "rpc", lat, len(appends), "batch",
+                            "strings_per_s"))
+            dist.close()
+        finally:
+            for p in procs:
+                p.terminate()
+    finally:
+        shutil.rmtree(dir_path, ignore_errors=True)
+    return rows

@@ -117,7 +117,7 @@ def bench_kernels(size_mib: int) -> None:
     batch = strings[:256]
     dev.encode_to_bytes(batch, use_pallas=False)
     t0 = time.perf_counter()
-    enc = dev.encode_to_bytes(batch, use_pallas=False)
+    dev.encode_to_bytes(batch, use_pallas=False)
     dt = time.perf_counter() - t0
     bb = sum(len(s) for s in batch)
     _emit("kernels/encode_batch_jit", dt / len(batch) * 1e6,
@@ -152,6 +152,21 @@ def bench_ingest(size_mib: int) -> None:
                         f"ratio_after={r['ratio_after']};"
                         f"drift={r['drift_at_trigger']}")
         _emit(f"ingest/{r['dataset']}/{r['op']}", us, derived)
+
+
+def bench_rpc(size_mib: int) -> None:
+    """Multi-process shard serving: loopback RPC vs in-process routing."""
+    from benchmarks.rpc_bench import rpc_bench
+    rows = rpc_bench(size_mib)
+    _dump("rpc", rows)
+    for r in rows:
+        us = r["total_s"] / max(1, r["n"]) * 1e6
+        rate = ("lookups_s=" + str(r["lookups_per_s"])
+                if "lookups_per_s" in r
+                else "strings_s=" + str(r["strings_per_s"]))
+        _emit(f"rpc/{r['op']}/{r['transport']}", us,
+              f"{rate};p50_us={r['p50_us']};p99_us={r['p99_us']};"
+              f"per={r['latency_per']}")
 
 
 def bench_persist(size_mib: int) -> None:
@@ -191,6 +206,7 @@ ALL = {
     "store": bench_store,
     "ingest": bench_ingest,
     "persist": bench_persist,
+    "rpc": bench_rpc,
     "roofline": bench_roofline,
 }
 

@@ -1,0 +1,196 @@
+"""Benchmark smoke runner — the CI perf gate.
+
+Runs ``python benchmarks/run.py`` on tiny configs for the serving-path
+benchmarks (store, ingest, persist, rpc), converts the emitted CSV rows to
+the BENCH JSON schema (``{bench, metric, value, unit, commit}`` rows,
+written to ``BENCH_smoke.json`` and uploaded as a CI artifact), and fails
+on crash or on any metric regressing more than ``--factor`` (default 5x)
+against the checked-in ``results/bench/baseline.json``.
+
+Only metrics present in the baseline are gated — the baseline holds a
+curated handful of robust throughput numbers (measured on a dev box, then
+halved for hardware headroom; the 5x band absorbs CI-runner noise on top).
+
+  PYTHONPATH=src python benchmarks/smoke.py                 # gate + write
+  PYTHONPATH=src python benchmarks/smoke.py --update-baseline  # refresh floor
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE = os.path.join(REPO, "results", "bench", "baseline.json")
+SMOKE_BENCHES = "store,ingest,persist,rpc"
+
+#: derived-CSV keys worth tracking, and their units ("1/s" and "MiB/s" are
+#: rates — higher is better; "us" is a latency — lower is better)
+RATE_KEYS = {
+    "lookups_s": "1/s",
+    "lookups_per_s": "1/s",
+    "strings_s": "1/s",
+    "strings_per_s": "1/s",
+    "mib_s": "MiB/s",
+    "speedup_vs_retrain": "x",
+}
+
+
+def _commit() -> str:
+    sha = os.environ.get("GITHUB_SHA")
+    if sha:
+        return sha
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            capture_output=True,
+            text=True,
+            cwd=REPO,
+        )
+        return out.stdout.strip() or "unknown"
+    except OSError:
+        return "unknown"
+
+
+def run_benchmarks(only: str, quick: bool = True) -> list[str]:
+    """Invoke benchmarks/run.py in a child (a crash fails the job) and
+    return its CSV lines."""
+    env = {**os.environ}
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    cmd = [sys.executable, os.path.join(REPO, "benchmarks", "run.py")]
+    if quick:
+        cmd.append("--quick")
+    cmd += ["--only", only]
+    proc = subprocess.run(cmd, capture_output=True, text=True, env=env, cwd=REPO)
+    sys.stderr.write(proc.stderr)
+    print(proc.stdout)
+    if proc.returncode != 0:
+        raise SystemExit(f"benchmarks/run.py crashed with rc={proc.returncode}")
+    return [ln for ln in proc.stdout.splitlines() if "," in ln]
+
+
+def rows_from_csv(lines: list[str], commit: str) -> list[dict]:
+    """CSV ``name,us_per_call,derived`` -> BENCH schema rows."""
+    rows: list[dict] = []
+    for line in lines:
+        name, us, derived = line.split(",", 2)
+        if name == "name":  # header
+            continue
+        bench = name.split("/", 1)[0]
+        rows.append(
+            {
+                "bench": bench,
+                "metric": f"{name}/us_per_call",
+                "value": float(us),
+                "unit": "us",
+                "commit": commit,
+            }
+        )
+        for pair in derived.split(";"):
+            key, _, val = pair.partition("=")
+            if key not in RATE_KEYS:
+                continue
+            try:
+                value = float(val)
+            except ValueError:
+                continue
+            rows.append(
+                {
+                    "bench": bench,
+                    "metric": f"{name}/{key}",
+                    "value": value,
+                    "unit": RATE_KEYS[key],
+                    "commit": commit,
+                }
+            )
+    return rows
+
+
+def check_regressions(
+    rows: list[dict], baseline: list[dict], factor: float
+) -> list[str]:
+    """Compare against the checked-in floor; returns failure messages."""
+    current = {r["metric"]: r for r in rows}
+    failures = []
+    for base in baseline:
+        metric, base_value = base["metric"], float(base["value"])
+        row = current.get(metric)
+        if row is None:
+            failures.append(f"baseline metric {metric!r} missing from this run")
+            continue
+        value = float(row["value"])
+        if base.get("unit") == "us":  # latency: lower is better
+            ok = value <= base_value * factor
+            verdict = (
+                f"{value:.3f}us vs baseline {base_value:.3f}us (allowed {factor}x)"
+            )
+        else:  # rate: higher is better
+            ok = value >= base_value / factor
+            verdict = f"{value:.1f} vs baseline {base_value:.1f} (allowed /{factor})"
+        status = "ok" if ok else "REGRESSION"
+        print(f"  [{status}] {metric}: {verdict}")
+        if not ok:
+            failures.append(f"{metric}: {verdict}")
+    return failures
+
+
+#: metrics curated into a fresh baseline by --update-baseline: one robust
+#: throughput number per smoke bench (tiny-config p99s are too noisy to gate)
+BASELINE_METRICS = (
+    "store/onpair16/store-multiget/numpy/lookups_s",
+    "ingest/urls/extend-1024/strings_s",
+    "persist/book_titles/onpair16/speedup_vs_retrain",
+    "rpc/multiget/rpc/lookups_s",
+    "rpc/extend-512/rpc/strings_s",
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=SMOKE_BENCHES)
+    ap.add_argument("--out", default=os.path.join(REPO, "BENCH_smoke.json"))
+    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--factor", type=float, default=5.0)
+    ap.add_argument("--full-size", action="store_true", help="not --quick")
+    ap.add_argument(
+        "--update-baseline",
+        action="store_true",
+        help="rewrite the baseline floor from this run (values halved for "
+        "hardware headroom) instead of gating against it",
+    )
+    args = ap.parse_args()
+
+    rows = rows_from_csv(run_benchmarks(args.only, quick=not args.full_size), _commit())
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"wrote {len(rows)} rows to {args.out}")
+
+    if args.update_baseline:
+        current = {r["metric"]: r for r in rows}
+        floor = []
+        for metric in BASELINE_METRICS:
+            row = current[metric]
+            value = row["value"] * 2 if row["unit"] == "us" else row["value"] / 2
+            floor.append({**row, "value": round(value, 3), "commit": "baseline"})
+        with open(args.baseline, "w") as f:
+            json.dump(floor, f, indent=1)
+        print(f"rewrote {args.baseline} with {len(floor)} metrics")
+        return
+
+    if not os.path.exists(args.baseline):
+        raise SystemExit(f"no baseline at {args.baseline} (run --update-baseline)")
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    failures = check_regressions(rows, baseline, args.factor)
+    if failures:
+        raise SystemExit("bench-smoke regressions:\n  " + "\n  ".join(failures))
+    print(f"bench-smoke: {len(baseline)} gated metrics within {args.factor}x")
+
+
+if __name__ == "__main__":
+    main()

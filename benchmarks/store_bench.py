@@ -88,8 +88,8 @@ def store_ingest_bench(size_mib: int, seed: int = 0,
     Encoder-batched), seal cost amortisation, and a full drift->compact
     cycle (append a different distribution until the monitor trips, then
     time the re-train + rewrite and report the ratio recovery)."""
-    from repro.store.mutable import MutableStringStore
     from repro.core import registry
+    from repro.store.mutable import MutableStringStore
 
     strings = dataset(dataset_name, size_mib << 20)
     half = len(strings) // 2

@@ -51,7 +51,7 @@ max_out = max(len(strings[i]) for i in batch_ids)
 out = dev.decode_batch(tok_mat, ntok, max_out, use_pallas=True)
 assert out == [strings[i] for i in batch_ids]
 print(f"Pallas decode_compact: {len(out)} strings decoded on device, "
-      f"bit-exact vs host decoder")
+      "bit-exact vs host decoder")
 
 stream = np.concatenate(tokens)
 full = dev.decode_stream(stream, use_pallas=True)

@@ -20,7 +20,7 @@ from repro.data.synth import load_dataset
 strings = load_dataset("book_titles", 2 << 20)
 raw = sum(len(s) for s in strings)
 print(f"corpus: {len(strings)} strings, {raw / (1 << 20):.1f} MiB "
-      f"(synthetic Book Titles analogue)\n")
+      "(synthetic Book Titles analogue)\n")
 print(f"{'compressor':11s} {'ratio':>6s} {'comp MiB/s':>11s} "
       f"{'decomp MiB/s':>13s} {'access ns':>10s} {'train s':>8s}")
 

@@ -80,5 +80,5 @@ with tempfile.TemporaryDirectory() as d:
     assert reopened.multiget([0, new_id, len(store) - 1]) == \
         store.multiget([0, new_id, len(store) - 1])
     print(f"reopened {report['version']}: {len(reopened)} strings, "
-          f"multiget identical, still writable "
+          "multiget identical, still writable "
           f"(next id {reopened.append(b'one more') })")

@@ -10,7 +10,6 @@ rate is low, which is exactly the trade-off the paper measures.
 
 from __future__ import annotations
 
-import time
 import zlib
 
 import numpy as np

@@ -134,9 +134,9 @@ def train_bpe(strings: list[bytes], max_tokens: int = 65536,
                 if q >= n or seq[q] != b:
                     continue
                 # merge [p]=a,[q]=b -> [p]=new_id
-                l = int(prv[p])
+                left = int(prv[p])
                 r = int(nxt[q])
-                la = int(seq[l]) if l >= 0 else _SEP
+                la = int(seq[left]) if left >= 0 else _SEP
                 rb = int(seq[r]) if r < n else _SEP
                 dec(la, a)
                 dec(b, rb)
@@ -145,7 +145,7 @@ def train_bpe(strings: list[bytes], max_tokens: int = 65536,
                 nxt[p] = r
                 if r < n:
                     prv[r] = p
-                inc(la, new_id, int(l))
+                inc(la, new_id, int(left))
                 inc(new_id, rb, int(p))
     return entries
 

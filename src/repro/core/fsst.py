@@ -64,7 +64,6 @@ class _Matcher:
     def parse_symbols(self, s: bytes) -> list[bytes]:
         """Like parse but yields the matched substrings (training use)."""
         syms: list[bytes] = []
-        get = self.map.get
         pos, n = 0, len(s)
         while pos < n:
             max_len = min(8, n - pos)

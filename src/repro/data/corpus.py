@@ -18,7 +18,6 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.core.api import CompressedCorpus
-from repro.core.onpair import OnPairCompressor, OnPairConfig
 from repro.core.tokenizer import OnPairTokenizer
 
 

@@ -7,7 +7,9 @@ needed to write or serve shards).
 lazily by their callers so a numpy-only host can still shard and serve.
 """
 
-from repro.distributed.shard_store import (ShardedStringStore, open_shard,
-                                           plan_shards, save_sharded)
+from repro.distributed.shard_store import (ShardedStringStore, ShardRouter,
+                                           open_shard, plan_shards,
+                                           save_sharded)
 
-__all__ = ["ShardedStringStore", "open_shard", "plan_shards", "save_sharded"]
+__all__ = ["ShardRouter", "ShardedStringStore", "open_shard", "plan_shards",
+           "save_sharded"]

@@ -8,8 +8,15 @@ while the corpus is split on *segment* boundaries — the store's existing
 unit of scan decoding and routing — into N contiguous shards, each an
 independently openable :class:`~repro.store.store.CompressedStringStore`
 directory. A host serving shard k opens ``<dir>/shard-000k`` plus the shared
-dictionary and answers its id range; :class:`ShardedStringStore` is the
-single-process router used for testing and single-host serving.
+dictionary and answers its id range.
+
+:class:`ShardRouter` holds the routing/bounds arithmetic itself — global id
+-> (shard, local id) via contiguous bounds, order-preserving per-shard
+``multiget`` partitioning, tail-owned append bounds — and is shared by the
+two deployment shapes: :class:`ShardedStringStore` (every shard open
+in-process; testing and single-host serving) and
+``repro.net.router.DistributedStringStore`` (every shard behind its own
+RPC server process).
 
 Pure numpy — no jax required on either the writer or the reader host.
 """
@@ -119,12 +126,128 @@ def open_shard(dir_path: str, shard: int, mmap: bool = True,
     return store
 
 
-class ShardedStringStore:
+class ShardRouter:
+    """Routing/bounds arithmetic over contiguous per-shard id ranges.
+
+    Deployment-agnostic: subclasses provide the per-shard data plane
+    (``_shard_multiget`` / ``_shard_scan`` / ``_shard_stats`` /
+    ``_tail_extend``) while this base owns the global contract both the
+    in-process and the RPC router must honour — order-preserving multiget
+    reassembly, segment-respecting scans, and append bounds that only ever
+    grow the LAST shard (the owner of the global id space's tail).
+    """
+
+    def __init__(self, bounds: list[tuple[int, int]],
+                 dir_path: str | None = None):
+        self.bounds = [tuple(b) for b in bounds]
+        self.n_strings = self.bounds[-1][1] if self.bounds else 0
+        self._dir = dir_path
+        self._write_lock = threading.Lock()  # serialises bound updates
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.bounds)
+
+    def __len__(self) -> int:
+        return self.n_strings
+
+    # ------------------------------------------------------------- data plane
+    def _shard_multiget(self, k: int, local_ids: list[int]) -> list[bytes]:
+        raise NotImplementedError
+
+    def _shard_scan(self, k: int, lo: int, hi: int) -> list[bytes]:
+        raise NotImplementedError
+
+    def _shard_stats(self, k: int) -> dict:
+        raise NotImplementedError
+
+    def _tail_extend(self, strings: list[bytes]) -> tuple[list[int], int]:
+        """Append to the tail shard; returns (local ids, new local count)."""
+        raise NotImplementedError
+
+    def _fanout_multiget(self, jobs: list[tuple[int, list[int]]]
+                         ) -> list[list[bytes]]:
+        """Answer one multiget job per shard. Sequential here; the RPC
+        router overrides this with a concurrent per-connection fan-out."""
+        return [self._shard_multiget(k, local_ids) for k, local_ids in jobs]
+
+    # ---------------------------------------------------------------- routing
+    def route(self, gid: int) -> tuple[int, int]:
+        if not 0 <= gid < self.n_strings:
+            raise IndexError(f"string id {gid} out of range "
+                             f"[0, {self.n_strings})")
+        for k, (lo, hi) in enumerate(self.bounds):
+            if lo <= gid < hi:
+                return k, gid - lo
+        raise IndexError(f"string id {gid} not covered by any shard")
+
+    def get(self, gid: int) -> bytes:
+        k, local = self.route(gid)
+        return self._shard_multiget(k, [local])[0]
+
+    def multiget(self, ids) -> list[bytes]:
+        """Order-preserving batched lookup: ids partition per shard, each
+        shard answers with ONE batched decode, answers reassemble into
+        request order."""
+        routed = [self.route(int(i)) for i in ids]
+        per_shard: dict[int, list[int]] = {}
+        for pos, (k, _) in enumerate(routed):
+            per_shard.setdefault(k, []).append(pos)
+        jobs = [(k, [routed[p][1] for p in positions])
+                for k, positions in per_shard.items()]
+        out: list[bytes | None] = [None] * len(routed)
+        for (_, positions), got in zip(per_shard.items(),
+                                       self._fanout_multiget(jobs)):
+            for p, v in zip(positions, got):
+                out[p] = v
+        return out  # type: ignore[return-value]
+
+    def scan(self, lo: int, hi: int) -> list[bytes]:
+        """Decode the contiguous global id range [lo, hi): each shard scans
+        its covered sub-range, results concatenate in id order."""
+        if not (0 <= lo <= hi <= self.n_strings):
+            raise IndexError(
+                f"scan range [{lo}, {hi}) not within [0, {self.n_strings}]")
+        out: list[bytes] = []
+        for k, (s_lo, s_hi) in enumerate(self.bounds):
+            a, b = max(lo, s_lo), min(hi, s_hi)
+            if a < b:
+                out.extend(self._shard_scan(k, a - s_lo, b - s_lo))
+        return out
+
+    def stats_snapshot(self) -> dict:
+        """Aggregate per-shard stats under global routing metadata."""
+        shards = [self._shard_stats(k) for k in range(self.n_shards)]
+        return {"n_shards": self.n_shards, "n_strings": self.n_strings,
+                "bounds": [list(b) for b in self.bounds],
+                "shards": shards}
+
+    # ----------------------------------------------------------------- writes
+    def append(self, s: bytes) -> int:
+        return self.extend([s])[0]
+
+    def extend(self, strings: list[bytes]) -> list[int]:
+        """Route appends to the owning shard. New ids extend the global id
+        space, which is owned by the LAST shard (bounds are contiguous), so
+        that is where appended strings land — the same decision on both
+        sides of the RPC seam."""
+        # read-modify-write of bounds/n_strings must serialise: two racing
+        # extends could otherwise publish a count below acknowledged ids
+        with self._write_lock:
+            lo, _ = self.bounds[-1]
+            local_ids, local_n = self._tail_extend(strings)
+            self.bounds[-1] = (lo, lo + local_n)
+            self.n_strings = self.bounds[-1][1]
+        return [lo + i for i in local_ids]
+
+
+class ShardedStringStore(ShardRouter):
     """Global-id router over per-shard stores (single-process form).
 
     The same routing arithmetic a multi-host deployment performs at its RPC
-    layer: global id -> (shard, local id) via the manifest's contiguous
-    bounds; multiget partitions ids per shard, one batched decode each.
+    layer (``repro.net.router.DistributedStringStore`` — which shares this
+    class's :class:`ShardRouter` base), with every shard store open in this
+    process.
     """
 
     def __init__(self, stores: list[CompressedStringStore],
@@ -132,11 +255,8 @@ class ShardedStringStore:
                  dir_path: str | None = None):
         if len(stores) != len(bounds):
             raise ValueError("one store per shard bound required")
+        super().__init__(bounds, dir_path=dir_path)
         self.stores = stores
-        self.bounds = [tuple(b) for b in bounds]
-        self.n_strings = bounds[-1][1] if bounds else 0
-        self._dir = dir_path
-        self._write_lock = threading.Lock()  # serialises bound updates
 
     @classmethod
     def open(cls, dir_path: str, mmap: bool = True, writable: bool = False,
@@ -167,34 +287,16 @@ class ShardedStringStore:
                 bounds[k] = (lo, lo + store.n_strings)
         return cls(stores, bounds, dir_path=dir_path)
 
-    def route(self, gid: int) -> tuple[int, int]:
-        if not 0 <= gid < self.n_strings:
-            raise IndexError(f"string id {gid} out of range "
-                             f"[0, {self.n_strings})")
-        for k, (lo, hi) in enumerate(self.bounds):
-            if lo <= gid < hi:
-                return k, gid - lo
-        raise IndexError(f"string id {gid} not covered by any shard")
+    # ------------------------------------------------------------- data plane
+    def _shard_multiget(self, k: int, local_ids: list[int]) -> list[bytes]:
+        return self.stores[k].multiget(local_ids)
 
-    def get(self, gid: int) -> bytes:
-        k, local = self.route(gid)
-        return self.stores[k].get(local)
+    def _shard_scan(self, k: int, lo: int, hi: int) -> list[bytes]:
+        return self.stores[k].scan(lo, hi)
 
-    def multiget(self, ids) -> list[bytes]:
-        """Order-preserving batched lookup: ids partition per shard, each
-        shard answers with ONE batched decode."""
-        routed = [self.route(int(i)) for i in ids]
-        per_shard: dict[int, list[int]] = {}
-        for pos, (k, local) in enumerate(routed):
-            per_shard.setdefault(k, []).append(pos)
-        out: list[bytes | None] = [None] * len(routed)
-        for k, positions in per_shard.items():
-            got = self.stores[k].multiget([routed[p][1] for p in positions])
-            for p, v in zip(positions, got):
-                out[p] = v
-        return out  # type: ignore[return-value]
+    def _shard_stats(self, k: int) -> dict:
+        return self.stores[k].stats_snapshot()
 
-    # ------------------------------------------------------------------ writes
     def _writable_tail_store(self):
         store = self.stores[-1]
         if not hasattr(store, "extend"):
@@ -202,24 +304,12 @@ class ShardedStringStore:
                             "ShardedStringStore.open(dir, writable=True)")
         return store
 
-    def append(self, s: bytes) -> int:
-        return self.extend([s])[0]
-
-    def extend(self, strings: list[bytes]) -> list[int]:
-        """Route appends to the owning shard. New ids extend the global id
-        space, which is owned by the LAST shard (bounds are contiguous), so
-        that is where appended strings land — the same decision a multi-host
-        deployment's router makes before forwarding the write."""
+    def _tail_extend(self, strings: list[bytes]) -> tuple[list[int], int]:
         store = self._writable_tail_store()
-        # read-modify-write of bounds/n_strings must serialise: two racing
-        # extends could otherwise publish a count below acknowledged ids
-        with self._write_lock:
-            lo, _ = self.bounds[-1]
-            locals_ = store.extend(strings)
-            self.bounds[-1] = (lo, lo + store.n_strings)
-            self.n_strings = self.bounds[-1][1]
-        return [lo + i for i in locals_]
+        local_ids = store.extend(strings)
+        return local_ids, store.n_strings
 
+    # -------------------------------------------------------------- lifecycle
     def save(self) -> None:
         """Persist every writable shard (each as a versioned layout inside
         its shard directory) and atomically rewrite the manifest bounds —

@@ -19,16 +19,15 @@ Usage:
 
 import argparse
 import json
-import re
 import time
 import traceback
 
 import jax
 
 from repro.configs import REGISTRY, runnable_cells
-from repro.launch.hlo_analysis import analyze_hlo
 from repro.distributed.sharding import (batch_specs, cache_specs_tree,
                                         param_shardings, replicated, use_mesh)
+from repro.launch.hlo_analysis import analyze_hlo
 from repro.launch.mesh import make_production_mesh
 from repro.models.config import SHAPES
 from repro.models.model import cache_specs, input_specs

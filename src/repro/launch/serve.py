@@ -9,6 +9,13 @@ materialisation is a batched store multiget through the Pallas decoder.
       --prompts "the quick" "compression" --max-new 16
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-780m --smoke \
       --doc-ids 3 17 4242 --max-new 8
+
+``--shard-server`` flips the launcher into its other role: a per-shard RPC
+server process for the multi-process serving tier (``repro.net``) — no LM,
+and no jax needed on the host (heavy imports only happen on the LM path):
+
+  PYTHONPATH=src python -m repro.launch.serve \
+      --shard-server /data/corpus/shard-0002 --port 9102
 """
 
 from __future__ import annotations
@@ -16,19 +23,20 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs import get_arch
-from repro.core.tokenizer import OnPairTokenizer
-from repro.data.synth import load_dataset
-from repro.models.model import build_params, serve_decode, serve_prefill
-
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mamba2-780m")
+    ap.add_argument("--shard-server", default=None, metavar="SHARD_DIR",
+                    help="serve this shard directory (<dir>/shard-000k) over "
+                         "TCP via repro.net.shard_server and exit when "
+                         "interrupted; skips the LM entirely")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="--shard-server bind host")
+    ap.add_argument("--port", type=int, default=0,
+                    help="--shard-server bind port (0 = kernel-assigned)")
+    ap.add_argument("--read-only", action="store_true",
+                    help="--shard-server: serve as a read-only replica")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--prompts", nargs="+",
                     default=["the quick brown", "in memory database"])
@@ -51,6 +59,22 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=128)
     args = ap.parse_args()
+
+    if args.shard_server:
+        # RPC-server role: stdlib + numpy only — never pull in jax/the LM
+        from repro.net.shard_server import run
+        run(args.shard_server, host=args.host, port=args.port,
+            read_only=args.read_only)
+        return
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_arch
+    from repro.core.tokenizer import OnPairTokenizer
+    from repro.data.synth import load_dataset
+    from repro.models.model import build_params, serve_decode, serve_prefill
 
     cfg = get_arch(args.arch)
     if args.smoke:
@@ -122,7 +146,10 @@ def main() -> None:
                                   cfg, max_seq=args.max_seq)
     print(f"prefill: {tokens.shape} in {time.perf_counter() - t0:.2f}s")
 
-    decode = jax.jit(lambda p, c, b: serve_decode(p, c, b, cfg))
+    def decode_step(p, c, b):
+        return serve_decode(p, c, b, cfg)
+
+    decode = jax.jit(decode_step)
     outs = [list(s) for s in ids]
     tok_ids = jnp.argmax(logits, axis=-1)[:, None]
     t0 = time.perf_counter()

@@ -15,7 +15,6 @@ import argparse
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_arch
 from repro.data.corpus import CompressedCorpusStore

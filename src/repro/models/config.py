@@ -9,7 +9,7 @@ size and compile time bounded at 100+ layers.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 
 
 @dataclass(frozen=True)
@@ -156,8 +156,8 @@ class ArchConfig:
         if not self.n_experts:
             return self.n_params()
         full = self.n_params()
-        moe_layers = sum(1 for l in range(self.n_layers)
-                         if l % self.moe_every == self.moe_every - 1)
+        moe_layers = sum(1 for k in range(self.n_layers)
+                         if k % self.moe_every == self.moe_every - 1)
         per_expert = 3 * self.d_model * self.d_ff
         inactive = moe_layers * (self.n_experts - self.top_k) * per_expert
         return full - inactive

@@ -14,8 +14,6 @@ budget. Masks are computed from index arithmetic (never a (S, S) tensor).
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,0 +1,35 @@
+"""repro.net — the multi-process serving tier.
+
+Turns the shard directories written by ``repro.distributed.shard_store``
+into a retrieval *service*: each shard host runs a :class:`ShardServer`
+process over its directory, and a :class:`DistributedStringStore` routes
+global ids across them with the same contract as the in-process
+``ShardedStringStore`` (they share one ``ShardRouter`` base).
+
+  protocol      — compact length-prefixed binary framing over TCP
+                  (stdlib + numpy only; no jax, no RPC frameworks)
+  shard_server  — ShardServer: one shard directory behind a socket, all
+                  connections coalesced through one StoreService worker
+  router        — RemoteShardClient (pooled, reconnecting) +
+                  DistributedStringStore (concurrent per-shard fan-out,
+                  replica-backed compaction hand-off)
+"""
+
+from repro.net.protocol import (
+    FrameTooLargeError,
+    ProtocolError,
+    RemoteError,
+    TruncatedFrameError,
+)
+from repro.net.router import DistributedStringStore, RemoteShardClient
+from repro.net.shard_server import ShardServer
+
+__all__ = [
+    "DistributedStringStore",
+    "FrameTooLargeError",
+    "ProtocolError",
+    "RemoteError",
+    "RemoteShardClient",
+    "ShardServer",
+    "TruncatedFrameError",
+]

@@ -1,0 +1,6 @@
+"""``python -m repro.net <shard-dir>`` — run one shard server process."""
+
+from repro.net.shard_server import main
+
+if __name__ == "__main__":
+    main()

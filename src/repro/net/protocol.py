@@ -1,0 +1,235 @@
+"""Length-prefixed binary framing for the shard RPC plane.
+
+One frame per request and one per response, over a plain TCP socket::
+
+    +-------+---------+------+-------------+----------------+
+    | magic | version | kind | length (u32)| payload bytes  |
+    | "RS"  |   0x01  | u8   | little-end. | length bytes   |
+    +-------+---------+------+-------------+----------------+
+
+``kind`` is a request op (``OP_*``) on the way in and a status
+(``ST_OK``/``ST_ERR``) on the way out. Payloads are numpy-native packed
+arrays — id vectors are raw ``<i8`` buffers and string batches are an
+offsets-plus-blob container (:func:`pack_bytes_list`) — so a router or a
+server moves ``multiget`` batches without any per-string Python framing.
+Stdlib + numpy only: serving hosts need neither jax nor a third-party RPC
+stack.
+
+Frames above ``max_frame`` are refused *before* the payload is read
+(:class:`FrameTooLargeError` — a malformed or hostile peer cannot make the
+receiver allocate unbounded memory), and a socket that dies mid-frame
+surfaces :class:`TruncatedFrameError` rather than a silent short read.
+"""
+
+from __future__ import annotations
+
+import json
+import socket
+import struct
+
+import numpy as np
+
+MAGIC = b"RS"
+VERSION = 1
+_HEADER = struct.Struct("<2sBBI")
+HEADER_BYTES = _HEADER.size
+
+#: refuse frames above this size unless the caller raises the limit
+DEFAULT_MAX_FRAME = 64 << 20
+
+# request ops
+OP_PING = 0x01
+OP_GET = 0x02
+OP_MULTIGET = 0x03
+OP_SCAN = 0x04
+OP_APPEND = 0x05
+OP_EXTEND = 0x06
+OP_STATS = 0x07
+OP_COMPACT = 0x08
+OP_SAVE = 0x09
+
+# response statuses
+ST_OK = 0x40
+ST_ERR = 0x41
+
+OP_NAMES = {
+    OP_PING: "ping",
+    OP_GET: "get",
+    OP_MULTIGET: "multiget",
+    OP_SCAN: "scan",
+    OP_APPEND: "append",
+    OP_EXTEND: "extend",
+    OP_STATS: "stats",
+    OP_COMPACT: "compact",
+    OP_SAVE: "save",
+}
+
+
+class ProtocolError(Exception):
+    """Malformed frame: bad magic, unknown version, or unknown kind."""
+
+
+class FrameTooLargeError(ProtocolError):
+    """Declared payload length exceeds the receiver's ``max_frame``."""
+
+
+class TruncatedFrameError(ProtocolError):
+    """The stream ended (or the buffer ran out) mid-frame."""
+
+
+class RemoteError(RuntimeError):
+    """A server-side exception type the client does not re-raise natively."""
+
+
+# --------------------------------------------------------------------- frames
+def encode_frame(kind: int, payload: bytes = b"") -> bytes:
+    """One wire frame: header + payload."""
+    return _HEADER.pack(MAGIC, VERSION, kind, len(payload)) + payload
+
+
+def decode_header(header: bytes, max_frame: int = DEFAULT_MAX_FRAME) -> tuple[int, int]:
+    """Validate one header; returns ``(kind, payload_length)``."""
+    if len(header) < HEADER_BYTES:
+        raise TruncatedFrameError(
+            f"frame header truncated: {len(header)} of {HEADER_BYTES} bytes"
+        )
+    magic, version, kind, length = _HEADER.unpack(header[:HEADER_BYTES])
+    if magic != MAGIC:
+        raise ProtocolError(f"bad frame magic {magic!r}")
+    if version != VERSION:
+        raise ProtocolError(f"unsupported protocol version {version}")
+    if length > max_frame:
+        raise FrameTooLargeError(
+            f"frame payload of {length} bytes exceeds max_frame={max_frame}"
+        )
+    return kind, length
+
+
+def decode_frame(
+    buf: bytes, max_frame: int = DEFAULT_MAX_FRAME
+) -> tuple[int, bytes, int]:
+    """Decode one frame from an in-memory buffer.
+
+    Returns ``(kind, payload, bytes_consumed)``; raises
+    :class:`TruncatedFrameError` when the buffer holds less than one full
+    frame (the streaming equivalent is a peer dying mid-send).
+    """
+    kind, length = decode_header(buf, max_frame=max_frame)
+    end = HEADER_BYTES + length
+    if len(buf) < end:
+        raise TruncatedFrameError(
+            f"frame payload truncated: {len(buf) - HEADER_BYTES} of {length} bytes"
+        )
+    return kind, bytes(buf[HEADER_BYTES:end]), end
+
+
+def recv_exact(sock: socket.socket, n: int) -> bytes:
+    """Read exactly ``n`` bytes; '' mid-read raises TruncatedFrameError."""
+    parts = []
+    remaining = n
+    while remaining:
+        chunk = sock.recv(min(remaining, 1 << 20))
+        if not chunk:
+            raise TruncatedFrameError(
+                f"connection closed mid-frame ({n - remaining} of {n} bytes)"
+            )
+        parts.append(chunk)
+        remaining -= len(chunk)
+    return b"".join(parts)
+
+
+def send_frame(sock: socket.socket, kind: int, payload: bytes = b"") -> None:
+    sock.sendall(encode_frame(kind, payload))
+
+
+def recv_frame(
+    sock: socket.socket, max_frame: int = DEFAULT_MAX_FRAME
+) -> tuple[int, bytes] | None:
+    """Read one frame; ``None`` on a clean EOF at a frame boundary.
+
+    EOF *inside* a frame raises :class:`TruncatedFrameError`; an oversized
+    declared length raises :class:`FrameTooLargeError` before any payload
+    byte is read.
+    """
+    first = sock.recv(1)
+    if not first:
+        return None
+    header = first + recv_exact(sock, HEADER_BYTES - 1)
+    kind, length = decode_header(header, max_frame=max_frame)
+    payload = recv_exact(sock, length) if length else b""
+    return kind, payload
+
+
+# ------------------------------------------------------------------- payloads
+def pack_ids(ids) -> bytes:
+    """Id vector as a raw ``<i8`` buffer (numpy zero-copy on both ends)."""
+    return np.asarray(list(ids), dtype="<i8").tobytes()
+
+
+def unpack_ids(payload: bytes) -> list[int]:
+    if len(payload) % 8:
+        raise ProtocolError(f"id vector of {len(payload)} bytes is not <i8-aligned")
+    return [int(i) for i in np.frombuffer(payload, dtype="<i8")]
+
+
+def pack_bytes_list(items: list[bytes]) -> bytes:
+    """String batch container: ``u32 n | i8 offsets[n+1] | blob``.
+
+    The same offsets-plus-payload shape the store's corpus uses, so a
+    ``multiget`` response is two ``np.frombuffer`` views, not n copies.
+    """
+    offsets = np.zeros(len(items) + 1, dtype="<i8")
+    np.cumsum([len(s) for s in items], out=offsets[1:])
+    head = struct.pack("<I", len(items))
+    return head + offsets.tobytes() + b"".join(items)
+
+
+def unpack_bytes_list(payload: bytes) -> list[bytes]:
+    if len(payload) < 4:
+        raise ProtocolError("bytes-list payload shorter than its count header")
+    (n,) = struct.unpack_from("<I", payload)
+    off_end = 4 + (n + 1) * 8
+    if len(payload) < off_end:
+        raise ProtocolError(f"bytes-list offsets truncated (n={n})")
+    offsets = np.frombuffer(payload, dtype="<i8", count=n + 1, offset=4)
+    blob = payload[off_end:]
+    if offsets.size and int(offsets[-1]) != len(blob):
+        raise ProtocolError(
+            f"bytes-list blob holds {len(blob)} bytes, offsets claim {int(offsets[-1])}"
+        )
+    return [bytes(blob[int(offsets[k]) : int(offsets[k + 1])]) for k in range(n)]
+
+
+def pack_json(obj) -> bytes:
+    return json.dumps(obj).encode()
+
+
+def unpack_json(payload: bytes):
+    return json.loads(payload.decode())
+
+
+# --------------------------------------------------------------------- errors
+#: exception types a client re-raises natively (everything else: RemoteError)
+_NATIVE_ERRORS = {
+    "FrameTooLargeError": FrameTooLargeError,
+    "IndexError": IndexError,
+    "KeyError": KeyError,
+    "TypeError": TypeError,
+    "ValueError": ValueError,
+    "RuntimeError": RuntimeError,
+}
+
+
+def pack_error(exc: BaseException) -> bytes:
+    return pack_json({"type": type(exc).__name__, "message": str(exc)})
+
+
+def raise_remote(payload: bytes) -> None:
+    """Re-raise a server-side error client-side, preserving builtin types
+    (an out-of-range id raises IndexError through the socket, exactly as it
+    would in-process)."""
+    err = unpack_json(payload)
+    cls = _NATIVE_ERRORS.get(err.get("type", ""))
+    if cls is not None:
+        raise cls(err.get("message", "remote error"))
+    raise RemoteError(f"{err.get('type', 'Exception')}: {err.get('message', '')}")

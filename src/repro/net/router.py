@@ -1,0 +1,426 @@
+"""RemoteShardClient + DistributedStringStore — the routing tier.
+
+:class:`RemoteShardClient` speaks :mod:`repro.net.protocol` to one shard
+server through a small connection pool (each in-flight request leases one
+socket, so a slow ``compact`` on one connection never head-of-line-blocks a
+``multiget`` on another) and transparently reconnects with capped
+exponential backoff — a shard process that is killed and restarted is
+re-found without the caller noticing more than latency.
+
+:class:`DistributedStringStore` is the multi-process form of
+:class:`~repro.distributed.shard_store.ShardedStringStore` and shares its
+:class:`~repro.distributed.shard_store.ShardRouter` base, so the global
+contract (order-preserving multiget, contiguous bounds, tail-owned appends)
+is literally the same code — only the data plane swaps from in-process
+stores to sockets, with ``multiget`` fanning out per shard concurrently.
+
+Compaction hand-off: ``register_replica(shard, address)`` attaches a
+read-only server (same directory, same versioned generation) to a shard.
+While ``compact(shard)`` runs, reads covered by the replica drain to it and
+appends targeting the shard park in a bounded retry queue; when the primary
+returns (its new ``current.json`` generation is published at that point),
+queued appends replay in arrival order and their callers get their ids —
+acknowledged appends are never lost, and reads never wait on the rewrite.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import queue
+import socket
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+
+from repro.distributed.shard_store import MANIFEST, ShardRouter
+from repro.net import protocol as P
+from repro.store.store import write_json_atomic
+
+
+#: ops safe to re-send after a transport failure mid-exchange — everything
+#: else (append/extend/compact/save) may already have been applied by a
+#: slow-but-alive server, so blind resends would duplicate work
+_IDEMPOTENT_OPS = frozenset(
+    {P.OP_PING, P.OP_GET, P.OP_MULTIGET, P.OP_SCAN, P.OP_STATS}
+)
+
+
+class RemoteShardClient:
+    """Pooled, reconnecting RPC client for one shard server.
+
+    Reads reconnect and retry transparently. Writes retry only while a
+    connection cannot be *established*; once a write has been put on the
+    wire, a transport failure surfaces as ConnectionError instead of
+    resending — the server may already have applied it, and duplicating
+    appends silently is worse than making the caller decide.
+    """
+
+    def __init__(
+        self,
+        address: tuple[str, int],
+        timeout: float = 30.0,
+        pool_size: int = 4,
+        reconnect_attempts: int = 16,
+        retry_delay_s: float = 0.05,
+        max_retry_delay_s: float = 0.5,
+        max_frame: int = P.DEFAULT_MAX_FRAME,
+    ):
+        self.address = (str(address[0]), int(address[1]))
+        self.timeout = float(timeout)
+        self.pool_size = int(pool_size)
+        self.reconnect_attempts = int(reconnect_attempts)
+        self.retry_delay_s = float(retry_delay_s)
+        self.max_retry_delay_s = float(max_retry_delay_s)
+        self.max_frame = int(max_frame)
+        self._pool: queue.LifoQueue = queue.LifoQueue()
+        self._closed = False
+        self.reconnects = 0
+
+    # ------------------------------------------------------------ connections
+    def _connect(self) -> socket.socket:
+        sock = socket.create_connection(self.address, timeout=self.timeout)
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        return sock
+
+    def _checkout(self) -> socket.socket:
+        try:
+            return self._pool.get_nowait()
+        except queue.Empty:
+            return self._connect()
+
+    def _checkin(self, sock: socket.socket) -> None:
+        if self._closed or self._pool.qsize() >= self.pool_size:
+            sock.close()
+        else:
+            self._pool.put(sock)
+
+    def close(self) -> None:
+        self._closed = True
+        while True:
+            try:
+                self._pool.get_nowait().close()
+            except queue.Empty:
+                return
+
+    def __enter__(self) -> "RemoteShardClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ----------------------------------------------------------------- calls
+    def _call(self, op: int, payload: bytes = b"", timeout: float = -1.0) -> bytes:
+        """One request/response exchange; reconnect-and-retry on transport
+        failure (dead socket, truncated frame) for idempotent ops, never on
+        application errors (those arrive as ST_ERR and re-raise once).
+
+        ``timeout=None`` blocks for as long as the server works (compaction
+        can legitimately outlast the default request timeout); the default
+        ``-1.0`` sentinel means "use the client's configured timeout".
+        """
+        if self._closed:
+            raise RuntimeError("client is closed")
+        last: Exception | None = None
+        for attempt in range(self.reconnect_attempts + 1):
+            if attempt:
+                self.reconnects += 1
+                time.sleep(
+                    min(
+                        self.retry_delay_s * (2 ** (attempt - 1)),
+                        self.max_retry_delay_s,
+                    )
+                )
+            try:
+                sock = self._checkout()
+            except OSError as exc:
+                last = exc  # nothing was sent: always safe to retry
+                continue
+            sock.settimeout(self.timeout if timeout == -1.0 else timeout)
+            try:
+                P.send_frame(sock, op, payload)
+                frame = P.recv_frame(sock, max_frame=self.max_frame)
+                if frame is None:
+                    raise P.TruncatedFrameError("server closed before answering")
+            except (OSError, P.TruncatedFrameError) as exc:
+                sock.close()
+                if op in _IDEMPOTENT_OPS:
+                    last = exc
+                    continue
+                # a write already on the wire may have been applied — do not
+                # resend it; surface the uncertainty to the caller instead
+                raise ConnectionError(
+                    f"{P.OP_NAMES.get(op, hex(op))} to {self.address[0]}:"
+                    f"{self.address[1]} failed mid-exchange; the server may "
+                    "or may not have applied it"
+                ) from exc
+            except P.ProtocolError:
+                # oversized/garbled response: the stream cannot be reused
+                sock.close()
+                raise
+            status, resp = frame
+            sock.settimeout(self.timeout)
+            self._checkin(sock)
+            if status == P.ST_ERR:
+                P.raise_remote(resp)
+            if status != P.ST_OK:
+                raise P.ProtocolError(f"unexpected response status 0x{status:02x}")
+            return resp
+        raise ConnectionError(
+            f"shard server {self.address[0]}:{self.address[1]} unreachable "
+            f"after {self.reconnect_attempts + 1} attempts"
+        ) from last
+
+    def ping(self, payload: bytes = b"") -> bytes:
+        return self._call(P.OP_PING, payload)
+
+    def get(self, i: int) -> bytes:
+        return self._call(P.OP_GET, P.pack_ids([i]))
+
+    def multiget(self, ids) -> list[bytes]:
+        return P.unpack_bytes_list(self._call(P.OP_MULTIGET, P.pack_ids(ids)))
+
+    def scan(self, lo: int, hi: int) -> list[bytes]:
+        return P.unpack_bytes_list(self._call(P.OP_SCAN, P.pack_ids([lo, hi])))
+
+    def append(self, s: bytes) -> int:
+        return P.unpack_ids(self._call(P.OP_APPEND, bytes(s)))[0]
+
+    def extend(self, strings: list[bytes]) -> list[int]:
+        return P.unpack_ids(self._call(P.OP_EXTEND, P.pack_bytes_list(strings)))
+
+    def stats(self) -> dict:
+        return P.unpack_json(self._call(P.OP_STATS))
+
+    def compact(self, **kw) -> dict:
+        # retrain + rewrite can far outlast the request timeout: block
+        return P.unpack_json(
+            self._call(P.OP_COMPACT, P.pack_json(kw) if kw else b"", timeout=None)
+        )
+
+    def save(self) -> dict:
+        return P.unpack_json(self._call(P.OP_SAVE, timeout=None))
+
+    @property
+    def n_strings(self) -> int:
+        return int(self.stats()["n_strings"])
+
+
+class DistributedStringStore(ShardRouter):
+    """Global-id router over per-shard RPC servers (multi-process form)."""
+
+    def __init__(
+        self,
+        clients: list[RemoteShardClient],
+        bounds: list[tuple[int, int]],
+        dir_path: str | None = None,
+        max_workers: int | None = None,
+        max_pending_appends: int = 1024,
+        scan_chunk: int = 4096,
+    ):
+        if len(clients) != len(bounds):
+            raise ValueError("one client per shard bound required")
+        super().__init__(bounds, dir_path=dir_path)
+        self.clients = clients
+        self.max_pending_appends = int(max_pending_appends)
+        self.scan_chunk = int(scan_chunk)
+        self._pool = ThreadPoolExecutor(
+            max_workers=max_workers or min(32, 2 * max(1, len(clients))),
+            thread_name_prefix="dstore",
+        )
+        self._replicas: dict[int, RemoteShardClient] = {}
+        self._replica_n: dict[int, int] = {}
+        self._draining: dict[int, bool] = {}
+        self._pending: dict[int, queue.Queue] = {}
+        self._flush_locks: dict[int, threading.Lock] = {}
+
+    @classmethod
+    def connect(
+        cls,
+        addresses,
+        bounds: list[tuple[int, int]] | None = None,
+        dir_path: str | None = None,
+        client_kw: dict | None = None,
+        **kw,
+    ) -> "DistributedStringStore":
+        """Connect to shard servers (``[(host, port), ...]``, in shard
+        order). Without explicit ``bounds`` each shard is asked its
+        ``n_strings`` and the contiguous global bounds are derived — the
+        live-cluster equivalent of reading the manifest."""
+        clients = [RemoteShardClient(a, **(client_kw or {})) for a in addresses]
+        if bounds is None:
+            bounds = []
+            lo = 0
+            for c in clients:
+                n = c.n_strings
+                bounds.append((lo, lo + n))
+                lo += n
+        return cls(clients, bounds, dir_path=dir_path, **kw)
+
+    def close(self) -> None:
+        self._pool.shutdown(wait=False)
+        for c in self.clients:
+            c.close()
+        for c in self._replicas.values():
+            c.close()
+
+    def __enter__(self) -> "DistributedStringStore":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------------- data plane
+    def _read_client(self, k: int, max_local: int) -> RemoteShardClient:
+        """The primary, unless shard k is draining into a replica that
+        covers every requested id (replicas only hold the generation they
+        opened; newer appends must still come from the primary)."""
+        if self._draining.get(k):
+            replica = self._replicas.get(k)
+            if replica is not None and max_local < self._replica_n.get(k, 0):
+                return replica
+        return self.clients[k]
+
+    def _shard_multiget(self, k: int, local_ids: list[int]) -> list[bytes]:
+        client = self._read_client(k, max(local_ids) if local_ids else -1)
+        return client.multiget(local_ids)
+
+    def _shard_scan(self, k: int, lo: int, hi: int) -> list[bytes]:
+        """Range decode in bounded-count chunks: one giant scan response
+        would trip the protocol's max_frame refusal; N modest RPCs stream
+        the same bytes."""
+        client = self._read_client(k, hi - 1)
+        out: list[bytes] = []
+        for c_lo in range(lo, hi, self.scan_chunk):
+            out.extend(client.scan(c_lo, min(c_lo + self.scan_chunk, hi)))
+        return out
+
+    def _shard_stats(self, k: int) -> dict:
+        return self.clients[k].stats()
+
+    def _fanout_multiget(self, jobs: list[tuple[int, list[int]]]) -> list[list[bytes]]:
+        """Per-shard fan-out on the pool: one RPC per touched shard, all in
+        flight concurrently; reassembly order is the caller's job list."""
+        if len(jobs) == 1:  # don't pay executor latency for one shard
+            k, local_ids = jobs[0]
+            return [self._shard_multiget(k, local_ids)]
+        futs = [self._pool.submit(self._shard_multiget, k, lids) for k, lids in jobs]
+        return [f.result() for f in futs]
+
+    def _tail_extend(self, strings: list[bytes]) -> tuple[list[int], int]:
+        local_ids = self.clients[-1].extend(strings)
+        if not local_ids:
+            return local_ids, self.bounds[-1][1] - self.bounds[-1][0]
+        return local_ids, local_ids[-1] + 1
+
+    # ----------------------------------------------------------------- writes
+    def extend(self, strings: list[bytes]) -> list[int]:
+        """Append via the tail shard's primary; while that shard is
+        compacting, park in the bounded retry queue instead and block until
+        the post-compact replay acknowledges real ids."""
+        k = len(self.clients) - 1
+        if self._draining.get(k):
+            fut: Future = Future()
+            pending = self._pending[k]
+            try:
+                pending.put(
+                    ([bytes(s) for s in strings], fut),
+                    timeout=self.clients[k].timeout,
+                )
+            except queue.Full:
+                raise RuntimeError(
+                    f"append retry queue full ({self.max_pending_appends} "
+                    "batches) while shard compacts — back off and retry"
+                ) from None
+            if not self._draining.get(k):
+                # compact finished between the flag check and the put: the
+                # flusher may already have drained past us — flush ourselves
+                self._flush_pending(k)
+            return fut.result()
+        return super().extend(strings)
+
+    def _flush_pending(self, k: int) -> None:
+        """Replay parked appends in arrival order against the primary.
+
+        The per-shard flush lock admits ONE drainer at a time: the compact
+        thread's post-swap flush and an appender's double-check flush can
+        race, and two concurrent drainers could otherwise interleave their
+        ``extend`` calls and assign ids out of arrival order.
+        """
+        pending = self._pending.get(k)
+        if pending is None:
+            return
+        with self._flush_locks[k]:
+            while True:
+                try:
+                    strings, fut = pending.get_nowait()
+                except queue.Empty:
+                    return
+                try:
+                    fut.set_result(super().extend(strings))
+                except Exception as exc:
+                    fut.set_exception(exc)
+
+    # -------------------------------------------------------------- lifecycle
+    def register_replica(
+        self, shard: int, address: tuple[str, int], **client_kw
+    ) -> RemoteShardClient:
+        """Attach a read-only replica server to ``shard`` (opened from the
+        same directory's current versioned generation). Reads drain to it
+        during that shard's ``compact()``."""
+        client = RemoteShardClient(address, **client_kw)
+        stats = client.stats()
+        if stats.get("writable"):
+            raise ValueError(
+                f"replica for shard {shard} at {address} is writable — "
+                "replicas must be started with --read-only"
+            )
+        self._replicas[shard] = client
+        self._replica_n[shard] = int(stats["n_strings"])
+        return client
+
+    def compact(self, shard: int | None = None, **kw) -> list[dict]:
+        """Compact one shard (or all). With a registered replica the shard
+        enters hand-off: reads drain to the replica, appends park in the
+        retry queue, and both flip back the moment the primary has published
+        its new generation."""
+        targets = range(len(self.clients)) if shard is None else [shard]
+        return [self._compact_one(k, **kw) for k in targets]
+
+    def _compact_one(self, k: int, **kw) -> dict:
+        replica = self._replicas.get(k)
+        if replica is None:
+            return self.clients[k].compact(**kw)
+        # refresh coverage: the replica serves ids it had when it opened
+        self._replica_n[k] = replica.n_strings
+        self._pending.setdefault(k, queue.Queue(maxsize=self.max_pending_appends))
+        self._flush_locks.setdefault(k, threading.Lock())
+        self._draining[k] = True
+        try:
+            # blocking RPC: when it returns, the primary has swapped state
+            # and (when directory-backed) published its new current.json
+            return self.clients[k].compact(**kw)
+        finally:
+            self._draining[k] = False
+            self._flush_pending(k)
+
+    def save(self) -> list[dict]:
+        """Ask every writable shard server to persist its generation, then
+        rewrite the local manifest bounds when this router knows the
+        directory (single-host topologies; remote routers leave the
+        manifest to the operator)."""
+        with self._write_lock:
+            reports = []
+            for k, c in enumerate(self.clients):
+                if self._shard_stats(k).get("writable"):
+                    reports.append(c.save())
+            if self._dir is not None:
+                path = os.path.join(self._dir, MANIFEST)
+                with open(path) as f:
+                    manifest = json.load(f)
+                manifest.update(
+                    n_strings=self.n_strings,
+                    bounds=[list(b) for b in self.bounds],
+                )
+                write_json_atomic(path, manifest)
+        return reports

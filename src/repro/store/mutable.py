@@ -51,6 +51,8 @@ from repro.store.segment import SegmentedCorpus
 from repro.store.store import CompressedStringStore, write_json_atomic
 
 try:
+    if os.environ.get("REPRO_NO_JAX"):  # opt-out: numpy-only serving hosts
+        raise ImportError("REPRO_NO_JAX is set")
     from repro.kernels.ops import OnPairDevice
 except Exception:  # pragma: no cover - container without jax
     OnPairDevice = None

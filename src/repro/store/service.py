@@ -14,6 +14,17 @@ enqueues a string and the worker folds every append in the drained batch
 into ONE ``store.extend`` (one Encoder parse pass) before answering the
 batch's reads — appends and reads interleave without torn state because the
 store itself serialises both under its lock.
+
+The bulk entry points ``submit_multiget(ids)`` / ``submit_extend(strings)``
+are the batch-drain hooks the RPC front-end (``repro.net.shard_server``)
+rides on: one network request becomes one queue item and one future, and
+the worker still folds every read in the drained batch into one
+``store.multiget`` and every write into one ``store.extend`` — micro-batching
+composes across connections.
+
+The worker blocks on the queue (no idle polling): ``close()`` wakes it with
+a sentinel. ``wakeups`` counts worker wakeups and therefore stays 0 while
+the service is idle — tests assert on it to keep the no-busy-wait property.
 """
 
 from __future__ import annotations
@@ -25,8 +36,6 @@ from concurrent.futures import Future
 
 from repro.core.metrics import LatencyReservoir
 from repro.store.store import CompressedStringStore
-
-_POLL_S = 0.05  # idle wakeup so close() is prompt even with no traffic
 
 
 class StoreService:
@@ -48,6 +57,7 @@ class StoreService:
         self.max_batch_seen = 0
         self.appends = 0
         self.append_batches = 0     # store.extend calls (coalesced writes)
+        self.wakeups = 0            # worker wakeups; 0 while idle (no polling)
         self._worker = threading.Thread(target=self._run, daemon=True,
                                         name="store-service")
         self._worker.start()
@@ -65,14 +75,28 @@ class StoreService:
             fut.set_exception(IndexError(
                 f"string id {i} out of range [0, {self.store.n_strings})"))
             return fut
-        # atomic vs close(): either we enqueue before the shutdown sentinel,
-        # or we observe _stop and fail fast — never an unresolved Future
-        with self._submit_lock:
-            if self._stop.is_set():
-                fut.set_exception(RuntimeError("service is closed"))
+        self._enqueue(("get", i, fut, time.perf_counter()), fut, 1)
+        return fut
+
+    def submit_multiget(self, ids) -> "Future[list[bytes]]":
+        """Enqueue one batched lookup; resolves to the decoded strings in
+        request order.
+
+        The whole request rides the queue as ONE item — the drain hook an
+        RPC front-end uses so each network request costs one future while
+        the worker still folds all concurrently drained reads into a single
+        ``store.multiget``.
+        """
+        fut: Future = Future()
+        ids = [int(i) for i in ids]
+        n = self.store.n_strings
+        for i in ids:
+            if not 0 <= i < n:
+                fut.set_exception(IndexError(
+                    f"string id {i} out of range [0, {n})"))
                 return fut
-            self.requests += 1
-            self._q.put(("get", i, fut, time.perf_counter()))
+        self._enqueue(("multiget", ids, fut, time.perf_counter()),
+                      fut, len(ids))
         return fut
 
     def submit_append(self, s: bytes) -> "Future[int]":
@@ -87,13 +111,35 @@ class StoreService:
             fut.set_exception(TypeError(
                 "store is read-only (open a MutableStringStore to append)"))
             return fut
+        self._enqueue(("append", bytes(s), fut, time.perf_counter()), fut, 1)
+        return fut
+
+    def submit_extend(self, strings) -> "Future[list[int]]":
+        """Enqueue one batched append; resolves to the new global ids.
+
+        The write-side bulk drain hook: one queue item per request, folded
+        with every other append/extend in the drained batch into ONE
+        ``store.extend`` (one Encoder parse pass).
+        """
+        fut: Future = Future()
+        if not hasattr(self.store, "extend"):
+            fut.set_exception(TypeError(
+                "store is read-only (open a MutableStringStore to append)"))
+            return fut
+        strings = [bytes(s) for s in strings]
+        self._enqueue(("extend", strings, fut, time.perf_counter()),
+                      fut, len(strings))
+        return fut
+
+    def _enqueue(self, item, fut: Future, n_requests: int) -> None:
+        # atomic vs close(): either we enqueue before the shutdown sentinel,
+        # or we observe _stop and fail fast — never an unresolved Future
         with self._submit_lock:
             if self._stop.is_set():
                 fut.set_exception(RuntimeError("service is closed"))
-                return fut
-            self.requests += 1
-            self._q.put(("append", bytes(s), fut, time.perf_counter()))
-        return fut
+                return
+            self.requests += n_requests
+            self._q.put(item)
 
     def get(self, i: int, timeout: float | None = 30.0) -> bytes:
         return self.submit(i).result(timeout)
@@ -127,6 +173,7 @@ class StoreService:
                 "max_batch_seen": self.max_batch_seen,
                 "appends": self.appends,
                 "append_batches": self.append_batches,
+                "wakeups": self.wakeups,
                 "request_latency": lat}
 
     # ----------------------------------------------------------------- worker
@@ -161,44 +208,22 @@ class StoreService:
 
     def _run(self) -> None:
         while True:
-            try:
-                item = self._q.get(timeout=_POLL_S)
-            except queue.Empty:
-                if self._stop.is_set():
-                    self._drain_and_fail()
-                    return
-                continue
+            # block until traffic or the close() sentinel arrives — an idle
+            # service burns zero wakeups (asserted by tests via `wakeups`)
+            item = self._q.get()
             if item is None:
-                if self._stop.is_set():
-                    self._drain_and_fail()
-                    return
-                continue
+                self._drain_and_fail()
+                return
+            self.wakeups += 1
             batch = self._collect_batch(item)
             # writes first: a client holding an id from a resolved append can
             # immediately read it back through the next batch
-            writes = [b for b in batch if b[0] == "append"]
-            reads = [b for b in batch if b[0] == "get"]
+            writes = [b for b in batch if b[0] in ("append", "extend")]
+            reads = [b for b in batch if b[0] in ("get", "multiget")]
             if writes:
-                try:
-                    new_ids = self.store.extend([s for _, s, _, _ in writes])
-                except Exception as exc:
-                    for _, _, fut, _ in writes:
-                        fut.set_exception(exc)
-                else:
-                    self.appends += len(writes)
-                    self.append_batches += 1
-                    for (_, _, fut, _), gid in zip(writes, new_ids):
-                        fut.set_result(gid)
+                self._serve_writes(writes)
             if reads:
-                ids = [i for _, i, _, _ in reads]
-                try:
-                    values = self.store.multiget(ids)
-                except Exception as exc:  # fail the whole batch, keep serving
-                    for _, _, fut, _ in reads:
-                        fut.set_exception(exc)
-                else:
-                    for (_, _, fut, _), val in zip(reads, values):
-                        fut.set_result(val)
+                self._serve_reads(reads)
             done = time.perf_counter()
             with self._lat_lock:
                 for _, _, _, t in batch:
@@ -207,3 +232,47 @@ class StoreService:
                 self.coalesced += len(batch)
             self.batches += 1
             self.max_batch_seen = max(self.max_batch_seen, len(batch))
+            if self._stop.is_set():
+                # _collect_batch consumed the close() sentinel mid-batch:
+                # looping back to the blocking get would hang forever
+                self._drain_and_fail()
+                return
+
+    def _serve_writes(self, writes: list) -> None:
+        """Fold every append/extend in the drained batch into ONE
+        store.extend, then split the contiguous ids back per request."""
+        strings: list[bytes] = []
+        spans: list[tuple[int, int]] = []  # [lo, hi) into `strings` per item
+        for kind, payload, _, _ in writes:
+            lo = len(strings)
+            strings.extend([payload] if kind == "append" else payload)
+            spans.append((lo, len(strings)))
+        try:
+            new_ids = self.store.extend(strings)
+        except Exception as exc:
+            for _, _, fut, _ in writes:
+                fut.set_exception(exc)
+            return
+        self.appends += len(strings)
+        self.append_batches += 1
+        for (kind, _, fut, _), (lo, hi) in zip(writes, spans):
+            fut.set_result(new_ids[lo] if kind == "append"
+                           else new_ids[lo:hi])
+
+    def _serve_reads(self, reads: list) -> None:
+        """Fold every get/multiget in the drained batch into ONE
+        store.multiget, then slice the answers back per request."""
+        ids: list[int] = []
+        spans: list[tuple[int, int]] = []
+        for kind, payload, _, _ in reads:
+            lo = len(ids)
+            ids.extend([payload] if kind == "get" else payload)
+            spans.append((lo, len(ids)))
+        try:
+            values = self.store.multiget(ids)
+        except Exception as exc:  # fail the whole batch, keep serving
+            for _, _, fut, _ in reads:
+                fut.set_exception(exc)
+            return
+        for (kind, _, fut, _), (lo, hi) in zip(reads, spans):
+            fut.set_result(values[lo] if kind == "get" else values[lo:hi])

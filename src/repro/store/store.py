@@ -35,6 +35,8 @@ from repro.store.segment import SegmentedCorpus
 from repro.store.stats import StoreStats
 
 try:
+    if os.environ.get("REPRO_NO_JAX"):  # opt-out: numpy-only serving hosts
+        raise ImportError("REPRO_NO_JAX is set")
     from repro.kernels.ops import OnPairDevice
     _HAVE_JAX = True
 except Exception:  # pragma: no cover - container without jax
@@ -88,7 +90,7 @@ class CompressedStringStore:
                              "or a DictArtifact (train() first)")
         caps = registry.capabilities(compressor.name)
         if not caps.token_stream:
-            raise ValueError(f"store requires a token-stream codec "
+            raise ValueError("store requires a token-stream codec "
                              f"(registry capability), got {compressor.name!r}")
         if num_buckets < 1 or num_buckets > len(_BUCKET_QUANTILES):
             raise ValueError(f"num_buckets must be in 1..{len(_BUCKET_QUANTILES)}")

@@ -2,8 +2,6 @@
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 
@@ -63,7 +61,7 @@ def state_shardings(abstract, mesh, cfg: ArchConfig, fsdp: bool = False):
 
     return {
         "params": jax.tree.map(
-            lambda s, l: NamedSharding(mesh, s), pspecs, abstract["params"],
+            lambda s, _leaf: NamedSharding(mesh, s), pspecs, abstract["params"],
             is_leaf=lambda x: isinstance(x, P)),
         "opt": {
             "m": moment_shardings(abstract["opt"]["m"]),

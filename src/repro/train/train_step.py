@@ -7,8 +7,6 @@ return pure functions ready for jax.jit with explicit in/out shardings.
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 
@@ -39,8 +37,8 @@ def make_train_step(cfg: ArchConfig, opt: AdamWConfig,
 
             def acc(carry, mb):
                 loss_sum, gacc = carry
-                l, g = single_grads(params, mb)
-                return (loss_sum + l,
+                loss_mb, g = single_grads(params, mb)
+                return (loss_sum + loss_mb,
                         jax.tree.map(jnp.add, gacc, g)), None
 
             zero = jax.tree.map(

@@ -1,6 +1,5 @@
 """Tests for the HLO roofline analyzer and synthetic-data generators."""
 
-import numpy as np
 import pytest
 
 from repro.data.synth import DATASETS, dataset_stats, load_dataset

@@ -14,7 +14,7 @@ except ImportError:  # optional dev dep: property tests skip, the rest run
 from repro.core import (ALL_COMPRESSORS, BPECompressor, FSSTCompressor,
                         OnPairConfig, PackedDictionary, auto_threshold,
                         make_onpair, make_onpair16, train_dictionary)
-from repro.core.lpm import DynamicLPM, lpm_from_entries
+from repro.core.lpm import DynamicLPM
 from repro.core.packing import (is_prefix_packed, pack_u64,
                                 shared_prefix_size, unpack_u64)
 from repro.data.synth import load_dataset

@@ -2,7 +2,6 @@
 reference, swept over shapes/dtypes/corpora, plus hypothesis property tests
 on the packing/compare primitives."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -14,13 +13,11 @@ except ImportError:  # optional dev dep: property tests skip, the rest run
     from _hypothesis_fallback import given, settings, st
 
 from repro.core import make_onpair16
-from repro.core.packed import PackedDictionary, hash_key as np_hash_key, split_u64
+from repro.core.packed import hash_key as np_hash_key, split_u64
 from repro.core.packing import pack_u64, shared_prefix_size
 from repro.data.synth import load_dataset
-from repro.kernels.ops import OnPairDevice, pack_strings
-from repro.kernels.ref import (DeviceDict, ctz32, decode_batch_ref_jit,
-                               encode_batch_ref_jit, hash_key,
-                               shared_prefix_bytes)
+from repro.kernels.ops import OnPairDevice
+from repro.kernels.ref import ctz32, hash_key, shared_prefix_bytes
 
 
 @pytest.fixture(scope="module")

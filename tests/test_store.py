@@ -9,8 +9,7 @@ import pytest
 
 from repro.core import RawCompressor, make_onpair, make_onpair16
 from repro.data.synth import load_dataset
-from repro.store import (CompressedStringStore, LRUCache, SegmentedCorpus,
-                         StoreService)
+from repro.store import CompressedStringStore, LRUCache, StoreService
 
 SAMPLE = 1 << 19
 

@@ -100,7 +100,7 @@ def test_checkpoint_elastic_reshard(tiny, tmp_path):
     d = str(tmp_path / "ck2")
     ckpt_lib.save(state, 3, d)
     abstract = jax.eval_shape(lambda: state)
-    sh = jax.tree.map(lambda l: NamedSharding(mesh, P()), abstract)
+    sh = jax.tree.map(lambda leaf: NamedSharding(mesh, P()), abstract)
     restored, _ = ckpt_lib.restore(d, abstract, shardings=sh)
     leaf = jax.tree.leaves(restored)[0]
     assert isinstance(leaf.sharding, NamedSharding)
