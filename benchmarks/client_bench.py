@@ -1,0 +1,97 @@
+"""Client API v3 benchmark: one session layer, every deployment shape.
+
+The same sharded directory is served through ``connect("shard://<dir>")``
+(in-process router) and ``connect("tcp://host:port,...")`` (spawned
+shard-server processes), and both backends run identical workloads through
+the identical :class:`~repro.client.session.StoreClient` surface:
+
+* ``multiget``        — sequential batched lookups (sync path);
+* ``multiget-async8`` — the same batches with 8 futures pipelined through
+  the session's async path (local executor + router fan-out / socket pool),
+  which is where the client layer earns its keep on the RPC transport.
+
+Child processes run with ``REPRO_NO_JAX=1`` (numpy serving hosts; spawn
+time stays out of the measurement window). Emits the harness JSON schema.
+"""
+
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import dataset
+from benchmarks.rpc_bench import _spawn_servers, _time_batches
+from repro.client import connect, format_tcp_url
+from repro.core.metrics import latency_summary
+from repro.distributed import save_sharded
+from repro.store import CompressedStringStore
+
+
+def _pipeline_batches(client, batches, depth: int):
+    """Keep ``depth`` multiget futures in flight; returns (per-future
+    submit->result latencies, wall seconds)."""
+    lats: list[float] = []
+    pending: list[tuple[float, object]] = []
+
+    def _drain_one() -> None:
+        t0, fut = pending.pop(0)
+        fut.result(60)
+        lats.append(time.perf_counter() - t0)
+
+    t_start = time.perf_counter()
+    for b in batches:
+        pending.append((time.perf_counter(), client.multiget_async(b)))
+        if len(pending) >= depth:
+            _drain_one()
+    while pending:
+        _drain_one()
+    return lats, time.perf_counter() - t_start
+
+
+def client_bench(size_mib: int, n_queries: int = 5000, batch: int = 256,
+                 n_shards: int = 3, depth: int = 8, seed: int = 0,
+                 dataset_name: str = "book_titles") -> list[dict]:
+    strings = dataset(dataset_name, size_mib << 20)
+    store = CompressedStringStore.build(
+        strings, sample_bytes=min(size_mib, 4) << 20, seed=seed)
+    dir_path = tempfile.mkdtemp(prefix="client_bench_")
+    rows: list[dict] = []
+    try:
+        save_sharded(store, dir_path, n_shards)
+        rng = np.random.default_rng(seed)
+        ids = rng.integers(0, len(strings), n_queries).tolist()
+        batches = [ids[k : k + batch] for k in range(0, len(ids), batch)]
+
+        def row(op: str, transport: str, lat_s: list[float],
+                total_s: float) -> dict:
+            lat = latency_summary(lat_s)
+            return {"dataset": dataset_name, "op": op, "transport": transport,
+                    "n": n_queries, "n_shards": n_shards,
+                    "latency_per": "batch",
+                    "p50_us": round(lat["p50_us"], 2),
+                    "p99_us": round(lat["p99_us"], 2),
+                    "lookups_per_s": round(n_queries / max(total_s, 1e-9), 1),
+                    "total_s": round(total_s, 4)}
+
+        def measure(transport: str, url: str) -> None:
+            with connect(url) as client:
+                client.multiget(ids[:batch])  # warm caches/connections
+                lat = _time_batches(client.multiget, batches)
+                rows.append(row("multiget", transport, lat, sum(lat)))
+                lat, wall = _pipeline_batches(client, batches, depth)
+                rows.append(row(f"multiget-async{depth}", transport, lat,
+                                wall))
+
+        measure("shard", f"shard://{dir_path}")
+        procs, addrs = _spawn_servers(dir_path, n_shards)
+        try:
+            measure("tcp", format_tcp_url(addrs))
+        finally:
+            for p in procs:
+                p.terminate()
+    finally:
+        shutil.rmtree(dir_path, ignore_errors=True)
+    return rows

@@ -1,9 +1,9 @@
 """RPC serving benchmark: loopback multi-process routing vs in-process.
 
 What the socket hop costs: the same sharded directory is served once
-through the in-process ``ShardedStringStore`` and once through N spawned
-``repro.net`` shard-server processes behind a ``DistributedStringStore``,
-and both run the same workloads — batched ``multiget`` (throughput +
+through ``connect("shard://<dir>")`` (in-process router) and once through N
+spawned ``repro.net`` shard-server processes behind ``connect("tcp://...")``
+— the v3 client layer on both sides — and both run the same workloads — batched ``multiget`` (throughput +
 per-batch tail latency), single ``get`` (request tail latency), and
 Encoder-batched ``extend`` (append throughput). Child processes run with
 ``REPRO_NO_JAX=1``: the RPC tier is the numpy-host serving story, and it
@@ -25,8 +25,9 @@ import time
 import numpy as np
 
 from benchmarks.common import dataset
+from repro.client import connect, format_tcp_url
 from repro.core.metrics import latency_summary
-from repro.distributed import ShardedStringStore, save_sharded
+from repro.distributed import save_sharded
 from repro.store import CompressedStringStore
 
 _SRC = os.path.join(
@@ -94,8 +95,8 @@ def rpc_bench(size_mib: int, n_queries: int = 5000, batch: int = 256,
                     rate_key: round(n / max(total, 1e-9), 1),
                     "total_s": round(total, 4)}
 
-        # ---------------------------------------------------- in-process form
-        local = ShardedStringStore.open(dir_path)
+        # ------------------------------------- in-process form (shard:// url)
+        local = connect(f"shard://{dir_path}")
         local.multiget(ids[:batch])  # warm caches/compiles identically
         lat = _time_batches(local.multiget, batches)
         rows.append(row("multiget", "inproc", lat, n_queries, "batch",
@@ -103,19 +104,19 @@ def rpc_bench(size_mib: int, n_queries: int = 5000, batch: int = 256,
         lat = _time_batches(local.get, singles)
         rows.append(row("get", "inproc", lat, n_singles, "lookup",
                         "lookups_per_s"))
-        local_w = ShardedStringStore.open(dir_path, writable=True)
+        local.close()
+        local_w = connect(f"shard://{dir_path}", writable=True)
         lat = _time_batches(local_w.extend, append_batches)
         rows.append(row("extend-512", "inproc", lat, len(appends), "batch",
                         "strings_per_s"))
+        local_w.close()
         # appends stay in memory (no save): the directory the servers open
         # below is byte-identical to the one the in-process run measured
 
-        # ------------------------------------------------- multi-process form
-        from repro.net import DistributedStringStore
-
+        # ---------------------------------- multi-process form (tcp:// url)
         procs, addrs = _spawn_servers(dir_path, n_shards)
         try:
-            dist = DistributedStringStore.connect(addrs)
+            dist = connect(format_tcp_url(addrs))
             dist.multiget(ids[:batch])  # warm connections + caches
             lat = _time_batches(dist.multiget, batches)
             rows.append(row("multiget", "rpc", lat, n_queries, "batch",

@@ -169,6 +169,19 @@ def bench_rpc(size_mib: int) -> None:
               f"per={r['latency_per']}")
 
 
+def bench_client(size_mib: int) -> None:
+    """Client API v3: one session over shard:// (in-process) and tcp://
+    (loopback RPC), sync vs pipelined-async multiget."""
+    from benchmarks.client_bench import client_bench
+    rows = client_bench(size_mib)
+    _dump("client", rows)
+    for r in rows:
+        us = r["total_s"] / max(1, r["n"]) * 1e6
+        _emit(f"client/{r['op']}/{r['transport']}", us,
+              f"lookups_s={r['lookups_per_s']};p50_us={r['p50_us']};"
+              f"p99_us={r['p99_us']};per={r['latency_per']}")
+
+
 def bench_persist(size_mib: int) -> None:
     """Artifact save/load + store.open latency vs retrain-from-scratch."""
     from benchmarks.persist_bench import persist_bench
@@ -207,6 +220,7 @@ ALL = {
     "ingest": bench_ingest,
     "persist": bench_persist,
     "rpc": bench_rpc,
+    "client": bench_client,
     "roofline": bench_roofline,
 }
 

@@ -1,7 +1,7 @@
 """Benchmark smoke runner — the CI perf gate.
 
 Runs ``python benchmarks/run.py`` on tiny configs for the serving-path
-benchmarks (store, ingest, persist, rpc), converts the emitted CSV rows to
+benchmarks (store, ingest, persist, rpc, client), converts the emitted CSV rows to
 the BENCH JSON schema (``{bench, metric, value, unit, commit}`` rows,
 written to ``BENCH_smoke.json`` and uploaded as a CI artifact), and fails
 on crash or on any metric regressing more than ``--factor`` (default 5x)
@@ -25,7 +25,7 @@ import sys
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BASELINE = os.path.join(REPO, "results", "bench", "baseline.json")
-SMOKE_BENCHES = "store,ingest,persist,rpc"
+SMOKE_BENCHES = "store,ingest,persist,rpc,client"
 
 #: derived-CSV keys worth tracking, and their units ("1/s" and "MiB/s" are
 #: rates — higher is better; "us" is a latency — lower is better)
@@ -43,15 +43,21 @@ def _commit() -> str:
     sha = os.environ.get("GITHUB_SHA")
     if sha:
         return sha
+    # outside a git checkout (sdist / extracted tree) every failure mode —
+    # git missing, rev-parse rc=128, even a git that prints garbage — must
+    # fall back to "unknown" rather than crash the smoke run
     try:
         out = subprocess.run(
             ["git", "rev-parse", "HEAD"],
             capture_output=True,
             text=True,
             cwd=REPO,
+            timeout=10,
         )
+        if out.returncode != 0:
+            return "unknown"
         return out.stdout.strip() or "unknown"
-    except OSError:
+    except (OSError, subprocess.SubprocessError):
         return "unknown"
 
 
@@ -147,6 +153,7 @@ BASELINE_METRICS = (
     "persist/book_titles/onpair16/speedup_vs_retrain",
     "rpc/multiget/rpc/lookups_s",
     "rpc/extend-512/rpc/strings_s",
+    "client/multiget/shard/lookups_s",
 )
 
 

@@ -20,6 +20,7 @@ import time
 import numpy as np
 
 from benchmarks.common import dataset
+from repro.client import wrap
 from repro.core.metrics import latency_summary, throughput_mib_s
 from repro.store import CompressedStringStore
 
@@ -73,8 +74,11 @@ def store_multiget_bench(size_mib: int, n_queries: int = 20000,
         for backend in backends:
             s = CompressedStringStore(comp, corpus, cache_bytes=0,
                                       backend=backend)
-            s.multiget(ids[:batch])  # warmup: trigger jit compiles
-            lat = _time_batches(s.multiget, batches)
+            # measured through the v3 session layer (what a caller actually
+            # holds); sync multigets ride the client's micro-batching service
+            with wrap(s) as client:
+                client.multiget(ids[:batch])  # warmup: trigger jit compiles
+                lat = _time_batches(client.multiget, batches)
             r = row(f"{variant}/store-multiget", backend, lat, "batch")
             r["jit_shapes"] = [list(x) for x in sorted(s.stats.jit_shapes)]
             rows.append(r)
@@ -104,13 +108,15 @@ def store_ingest_bench(size_mib: int, seed: int = 0,
                                   strings_per_segment=4096, cache_bytes=0,
                                   drift_threshold=0.2)
 
-    # single-string appends (per-call parse + tail update)
+    # single-string appends (per-call parse + tail update), measured through
+    # the session layer's write path (client.append -> service -> store)
     store = build()
     one_by_one = incoming[: min(5000, len(incoming))]
-    t0 = time.perf_counter()
-    for s in one_by_one:
-        store.append(s)
-    dt = time.perf_counter() - t0
+    with wrap(store) as client:
+        t0 = time.perf_counter()
+        for s in one_by_one:
+            client.append(s)
+        dt = time.perf_counter() - t0
     raw = sum(len(s) for s in one_by_one)
     rows.append({"dataset": dataset_name, "op": "append",
                  "n_strings": len(one_by_one), "total_s": round(dt, 4),
@@ -119,10 +125,11 @@ def store_ingest_bench(size_mib: int, seed: int = 0,
 
     # batched appends (one Encoder pass per batch, seals amortised)
     store = build()
-    t0 = time.perf_counter()
-    for k in range(0, len(incoming), 1024):
-        store.extend(incoming[k : k + 1024])
-    dt = time.perf_counter() - t0
+    with wrap(store) as client:
+        t0 = time.perf_counter()
+        for k in range(0, len(incoming), 1024):
+            client.extend(incoming[k : k + 1024])
+        dt = time.perf_counter() - t0
     raw = sum(len(s) for s in incoming)
     rows.append({"dataset": dataset_name, "op": "extend-1024",
                  "n_strings": len(incoming), "total_s": round(dt, 4),

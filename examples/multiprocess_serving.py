@@ -2,13 +2,15 @@
 
 1. Train one OnPair dictionary, save the corpus as N shard directories
    sharing that dictionary artifact (repro.distributed.shard_store).
-2. Spawn one shard-server PROCESS per shard (python -m repro.net) and route
-   a DistributedStringStore across them — byte-identical results to the
-   single-process ShardedStringStore over the same directories.
-3. Spawn a read-only REPLICA of the tail shard and compact the primary
-   while appends keep arriving: reads drain to the replica, the appends
-   park in the router's bounded retry queue, and everything is acknowledged
-   and durable once the primary publishes its new generation.
+2. Spawn one shard-server PROCESS per shard (python -m repro.net) and
+   connect the v3 client to both deployment shapes — connect("tcp://...")
+   across the processes and connect("shard://<dir>") in-process — with
+   byte-identical results through one session surface.
+3. Spawn a read-only REPLICA of the tail shard: read_preference="replica"
+   round-robins reads onto it outside compaction windows too, and during
+   compact() reads drain to it while appends park in the router's bounded
+   retry queue — everything acknowledged and durable once the primary
+   publishes its new generation.
 
 Stdlib + numpy only (REPRO_NO_JAX=1 in the children): this is the serving
 topology for hosts without accelerators.
@@ -25,9 +27,9 @@ import tempfile
 import threading
 import time
 
+from repro.client import connect, format_tcp_url
 from repro.data.synth import load_dataset
-from repro.distributed import ShardedStringStore, save_sharded
-from repro.net import DistributedStringStore
+from repro.distributed import save_sharded
 from repro.store import CompressedStringStore
 
 N_SHARDS = 3
@@ -65,12 +67,13 @@ try:
         addrs.append(addr)
     print(f"spawned {N_SHARDS} shard servers: {[p.pid for p in procs]}")
 
-    dist = DistributedStringStore.connect(addrs, dir_path=base)
-    local = ShardedStringStore.open(base)
+    url = format_tcp_url(addrs)
+    dist = connect(url, dir_path=base)
+    local = connect(f"shard://{base}")
     ids = list(range(0, len(strings), max(1, len(strings) // 4096)))
     assert dist.multiget(ids) == local.multiget(ids) == [strings[i] for i in ids]
-    print(f"multiget({len(ids)} ids spanning {N_SHARDS} shards): "
-          "byte-identical to the single-process router")
+    print(f"connect({url.split(',')[0]}...) multiget({len(ids)} ids spanning "
+          f"{N_SHARDS} shards): byte-identical to connect('shard://...')")
 
     # --- 3. replica-backed compaction hand-off -----------------------------
     tail = N_SHARDS - 1
@@ -81,6 +84,13 @@ try:
     )
     procs.append(replica_proc)
     dist.register_replica(tail, replica_addr)
+
+    # replica read load-balancing OUTSIDE the compaction window: with
+    # read_preference="replica", reads of ids the replica holds round-robin
+    # onto it (ids newer than its generation still come from the primary)
+    assert dist.multiget(pre[:8], read_preference="replica") == \
+        [b"pre-compact doc %d" % i for i in range(8)]
+    print('read_preference="replica": reads served by the replica set')
 
     done: dict = {}
 
@@ -104,10 +114,12 @@ try:
 
     assert dist.get(appended_id) == b"appended while the primary was compacting"
     dist.save()
-    reopened = ShardedStringStore.open(base)
-    assert reopened.get(appended_id) == b"appended while the primary was compacting"
-    assert reopened.multiget(ids) == [strings[i] for i in ids]
+    with connect(f"shard://{base}") as reopened:
+        assert reopened.get(appended_id) == \
+            b"appended while the primary was compacting"
+        assert reopened.multiget(ids) == [strings[i] for i in ids]
     print("after hand-off: append durable on disk, reopened router agrees — OK")
+    local.close()
     dist.close()
 finally:
     for p in procs:

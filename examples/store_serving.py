@@ -5,8 +5,10 @@
 2. Batched multiget — note the bounded set of jit-compiled decode shapes.
 3. Range scan — one vectorised decode per touched segment.
 4. StoreService — concurrent clients coalesced into micro-batches.
-5. Persistence — store.save(dir) / CompressedStringStore.open(dir): the
-   train-once dictionary artifact + corpus reopen with no retraining.
+5. Persistence + the v3 client layer — store.save(dir), then
+   connect("file://<dir>"): the train-once dictionary artifact + corpus
+   reopen with no retraining behind the uniform session surface
+   (sync + async + streaming scan + one stats schema).
 
   PYTHONPATH=src python examples/store_serving.py
 """
@@ -72,15 +74,28 @@ snap = store.stats_snapshot()
 print(f"totals: {snap['lookups']} lookups, cache hit rate "
       f"{snap['cache']['hit_rate']:.2f}, decode {snap['decode_mib_s']} MiB/s")
 
-# --- persistence: the dictionary is a shippable artifact --------------------
+# --- persistence + Client API v3: one session over the saved store ----------
+from repro.client import connect
+
 with tempfile.TemporaryDirectory() as d:
     t0 = time.perf_counter()
     store.save(d)
     save_ms = (time.perf_counter() - t0) * 1e3
     t0 = time.perf_counter()
-    reopened = CompressedStringStore.open(d)       # mmap, no retraining
-    open_ms = (time.perf_counter() - t0) * 1e3
-    assert reopened.multiget(ids[:200]) == store.multiget(ids[:200])
-    print(f"persistence: saved in {save_ms:.1f} ms, reopened in {open_ms:.1f} ms "
-          f"({reopened.artifact.num_entries} dict entries, codec "
-          f"{reopened.artifact.codec!r}), multiget identical")
+    with connect(f"file://{d}") as client:         # mmap, no retraining
+        open_ms = (time.perf_counter() - t0) * 1e3
+        assert client.multiget(ids[:200]) == store.multiget(ids[:200])
+        # async pipelining: several batched lookups in flight at once, all
+        # coalesced through the session's micro-batching service
+        futs = [client.multiget_async(ids[k : k + 100])
+                for k in range(0, 1000, 100)]
+        assert [b for f in futs for b in f.result(30)] == \
+            store.multiget(ids[:1000])
+        # streamed range decode (never materialises the whole range)
+        assert list(client.scan_iter(1000, 3000, chunk=512)) == docs
+        snap = client.stats()
+        print(f"client: saved in {save_ms:.1f} ms, connect('file://...') in "
+              f"{open_ms:.1f} ms ({client.backend.artifact.num_entries} dict "
+              f"entries); {snap['ops']} -> p99 "
+              f"{snap['latency_summary']['p99_us']:.0f} us, "
+              f"{snap['throughput_mib_s']} MiB/s, multiget identical")

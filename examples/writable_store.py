@@ -10,7 +10,9 @@
 4. compact(): re-train on the live data, rewrite every segment, swap a new
    versioned artifact directory atomically. All strings stay byte-identical;
    the ratio recovers.
-5. Reopen from disk — versioned layout, unsealed tail included.
+5. Reopen from disk through the v3 client layer (connect("mut://<dir>")) —
+   versioned layout, unsealed tail included, async appends pipelined
+   through the session's micro-batching service.
 
   PYTHONPATH=src python examples/writable_store.py
 """
@@ -74,11 +76,21 @@ with tempfile.TemporaryDirectory() as d:
           f"(train {report['train_s']:.2f}s), now {report['version']} "
           f"in {report['dir']}")
 
-    # --- 5. reopen the versioned directory ----------------------------------
-    reopened = MutableStringStore.open(d)
-    assert len(reopened) == len(store)
-    assert reopened.multiget([0, new_id, len(store) - 1]) == \
-        store.multiget([0, new_id, len(store) - 1])
-    print(f"reopened {report['version']}: {len(reopened)} strings, "
-          "multiget identical, still writable "
-          f"(next id {reopened.append(b'one more') })")
+    # --- 5. reopen the versioned directory via the client layer -------------
+    from repro.client import connect
+
+    with connect(f"mut://{d}") as client:
+        assert len(client) == len(store)
+        assert client.multiget([0, new_id, len(store) - 1]) == \
+            store.multiget([0, new_id, len(store) - 1])
+        # async appends pipeline through the same micro-batching service the
+        # sync calls ride; futures resolve to the assigned global ids
+        futs = [client.extend_async([b"doc-a-%d" % i, b"doc-b-%d" % i])
+                for i in range(8)]
+        new_ids = [i for f in futs for i in f.result(30)]
+        assert new_ids == list(range(len(store), len(store) + 16))
+        snap = client.stats()
+        print(f"reopened {report['version']} via connect('mut://...'): "
+              f"{snap['n_strings']} strings, multiget identical, "
+              f"{snap['ops'].get('extend', 0)} async extends in "
+              f"{snap['wakeups']} service wakeups")

@@ -1,0 +1,35 @@
+"""repro.client — Client API v3: one session layer over every store backend.
+
+The serving stack grew four frontends with drifting surfaces — the local
+:class:`~repro.store.store.CompressedStringStore` /
+:class:`~repro.store.mutable.MutableStringStore`, the in-process
+:class:`~repro.distributed.shard_store.ShardedStringStore` router, and the
+multi-process :class:`~repro.net.router.DistributedStringStore`. This
+package is the one entry point over all of them::
+
+    from repro.client import connect
+
+    client = connect("tcp://host0:9100,host1:9101",
+                     read_preference="replica", timeout=10.0)
+    client.multiget([3, 99_000, 41])            # sync, order-preserving
+    fut = client.multiget_async([7, 8, 9])      # pipelined future
+    for doc in client.scan_iter(0, 1_000_000):  # streamed, frame-bounded
+        ...
+    client.stats()                              # one schema, every backend
+
+  url        — connect-string parsing (file:// mut:// shard:// tcp://)
+  session    — StoreClient: the frozen sync/async surface + unified stats
+"""
+
+from repro.client.session import StoreClient, connect, wrap
+from repro.client.url import SCHEMES, StoreURL, format_tcp_url, parse_url
+
+__all__ = [
+    "SCHEMES",
+    "StoreClient",
+    "StoreURL",
+    "connect",
+    "format_tcp_url",
+    "parse_url",
+    "wrap",
+]

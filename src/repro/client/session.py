@@ -1,0 +1,487 @@
+"""StoreClient — one session object over every store deployment shape.
+
+``connect(url)`` resolves a store URL (:mod:`repro.client.url`) into a
+backend — a local :class:`CompressedStringStore` / `MutableStringStore`, an
+in-process :class:`ShardedStringStore`, or a multi-process
+:class:`DistributedStringStore` — and wraps it in a :class:`StoreClient`
+with a *frozen* surface: the same sync calls
+(``get/multiget/scan/append/extend/stats/compact/save/close``), the same
+async counterparts returning ``concurrent.futures.Future``
+(``get_async/multiget_async/append_async/extend_async``), the same
+streaming ``scan_iter``, and the same per-call options (``timeout=``,
+``read_preference="primary"|"replica"|"any"``) no matter which deployment
+shape sits behind it. New backends land behind this surface once, not once
+per call site.
+
+How the async path pipelines, per backend:
+
+* **local stores** (``file://`` / ``mut://``) — every data call rides the
+  store's micro-batching :class:`~repro.store.service.StoreService` bulk
+  hooks (``submit_multiget`` / ``submit_extend``): one queue item + one
+  future per call, and concurrent calls — sync callers on other threads
+  included — coalesce into single batched decodes / Encoder passes. The
+  service is created by the client (``max_wait_s`` defaults to 0 here:
+  drain-what's-there, no standing latency tax) and the ``target_p99_ms``
+  connect option arms its adaptive window controller.
+* **routers** (``shard://`` / ``tcp://``) — sync calls go straight at the
+  router (its own per-shard fan-out pool and the
+  :class:`RemoteShardClient` connection pools do the pipelining; a
+  per-call ``timeout=`` opts into the future path to get the bound);
+  async calls overlap on a small client executor.
+
+Every call is recorded client-side (op counts, latency reservoir, bytes
+moved), so :meth:`stats` reports one schema — ``latency_summary`` /
+``throughput_mib_s`` / ``wakeups`` — with identical keys across all four
+backends; the raw backend snapshot rides along under ``"backend"``.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+
+from repro.client.url import StoreURL, parse_url
+from repro.core.metrics import LatencyReservoir, throughput_mib_s
+from repro.distributed.shard_store import (
+    ShardedStringStore,
+    ShardRouter,
+    check_read_preference,
+)
+from repro.store.mutable import MutableStringStore
+from repro.store.service import StoreService
+from repro.store.store import CompressedStringStore
+
+
+class StoreClient:
+    """Uniform session over one store backend. Use :func:`connect` (URL) or
+    :func:`wrap` (already-open backend) instead of constructing directly."""
+
+    def __init__(self, backend, *, url: str = "", scheme: str = "",
+                 timeout: float = 30.0, read_preference: str = "primary",
+                 scan_chunk: int = 4096, owns_backend: bool = False,
+                 service: StoreService | None = None,
+                 max_async_workers: int = 8):
+        self.backend = backend
+        self.url = url
+        self.scheme = scheme
+        self.timeout = float(timeout)
+        self.read_preference = check_read_preference(read_preference)
+        self.scan_chunk = int(scan_chunk)
+        self._owns_backend = owns_backend
+        self._is_router = isinstance(backend, ShardRouter)
+        self._service = service
+        self._executor = (None if service is not None else
+                          ThreadPoolExecutor(max_workers=max_async_workers,
+                                             thread_name_prefix="store-client"))
+        self._closed = False
+        self._lock = threading.Lock()
+        self._lat = LatencyReservoir()
+        self._ops: dict[str, int] = {}
+        self._bytes_moved = 0
+        self._busy_s = 0.0
+
+    # ------------------------------------------------------------ bookkeeping
+    def _check_open(self) -> None:
+        if self._closed:
+            raise RuntimeError("client is closed")
+
+    def _pref(self, read_preference: str | None) -> str:
+        if read_preference is None:
+            return self.read_preference
+        return check_read_preference(read_preference)
+
+    def _record(self, op: str, t0: float, nbytes: int) -> None:
+        dt = time.perf_counter() - t0
+        with self._lock:
+            self._ops[op] = self._ops.get(op, 0) + 1
+            self._lat.record(dt)
+            self._bytes_moved += nbytes
+            self._busy_s += dt
+
+    def _tracked(self, fut: Future, op: str, t0: float, nbytes_of) -> Future:
+        """Attach session accounting to a backend/service future."""
+        def _done(f: Future) -> None:
+            nbytes = 0
+            if not f.cancelled() and f.exception() is None:
+                nbytes = nbytes_of(f.result())
+            self._record(op, t0, nbytes)
+        fut.add_done_callback(_done)
+        return fut
+
+    @staticmethod
+    def _len_sum(values) -> int:
+        return sum(len(v) for v in values)
+
+    def _submit(self, fn, *args, **kw) -> Future:
+        """Run ``fn`` on the client executor (router backends only)."""
+        try:
+            return self._executor.submit(fn, *args, **kw)
+        except RuntimeError:  # executor shut down under a racing close()
+            raise RuntimeError("client is closed") from None
+
+    def _direct(self, op: str, call, nbytes_of):
+        """Sync hot path for router backends: call straight into the
+        router's own fan-out — no executor hand-off. A per-call ``timeout=``
+        opts back into the future path (that is what buys the bound);
+        remote transports stay bounded regardless by the socket timeout."""
+        self._check_open()
+        t0 = time.perf_counter()
+        out = call()
+        self._record(op, t0, nbytes_of(out))
+        return out
+
+    # ---------------------------------------------------------------- queries
+    @property
+    def n_strings(self) -> int:
+        return len(self.backend)
+
+    def __len__(self) -> int:
+        return self.n_strings
+
+    def get_async(self, i: int, *,
+                  read_preference: str | None = None) -> "Future[bytes]":
+        self._check_open()
+        # validated on EVERY backend — a typo'd preference must fail the
+        # same way whether or not this backend can act on it
+        pref = self._pref(read_preference)
+        t0 = time.perf_counter()
+        if self._service is not None:
+            fut = self._service.submit(int(i))
+        else:
+            fut = self._submit(self.backend.get, int(i),
+                               read_preference=pref)
+        return self._tracked(fut, "get", t0, len)
+
+    def multiget_async(self, ids, *,
+                       read_preference: str | None = None
+                       ) -> "Future[list[bytes]]":
+        """One batched lookup as a future; many in flight pipeline through
+        the service queue (local) or the router fan-out (shard/tcp)."""
+        self._check_open()
+        pref = self._pref(read_preference)
+        t0 = time.perf_counter()
+        ids = [int(i) for i in ids]
+        if self._service is not None:
+            fut = self._service.submit_multiget(ids)
+        else:
+            fut = self._submit(self.backend.multiget, ids,
+                               read_preference=pref)
+        return self._tracked(fut, "multiget", t0, self._len_sum)
+
+    def get(self, i: int, *, timeout: float | None = None,
+            read_preference: str | None = None) -> bytes:
+        if self._service is None and timeout is None:
+            return self._direct(
+                "get",
+                lambda: self.backend.get(
+                    int(i), read_preference=self._pref(read_preference)),
+                len)
+        return self.get_async(i, read_preference=read_preference).result(
+            self.timeout if timeout is None else timeout)
+
+    def multiget(self, ids, *, timeout: float | None = None,
+                 read_preference: str | None = None) -> list[bytes]:
+        if self._service is None and timeout is None:
+            ids = [int(i) for i in ids]
+            return self._direct(
+                "multiget",
+                lambda: self.backend.multiget(
+                    ids, read_preference=self._pref(read_preference)),
+                self._len_sum)
+        return self.multiget_async(
+            ids, read_preference=read_preference).result(
+            self.timeout if timeout is None else timeout)
+
+    def scan(self, lo: int, hi: int, *,
+             read_preference: str | None = None) -> list[bytes]:
+        """Decode the contiguous id range [lo, hi) in one call (routers
+        already chunk below max_frame internally; use :meth:`scan_iter` to
+        stream without materialising the whole range)."""
+        self._check_open()
+        pref = self._pref(read_preference)
+        t0 = time.perf_counter()
+        if self._is_router:
+            out = self.backend.scan(int(lo), int(hi), read_preference=pref)
+        else:
+            out = self.backend.scan(int(lo), int(hi))
+        self._record("scan", t0, self._len_sum(out))
+        return out
+
+    def scan_iter(self, lo: int, hi: int, *, chunk: int | None = None,
+                  read_preference: str | None = None):
+        """Stream the id range [lo, hi) as an iterator of strings, fetched
+        in ``chunk``-sized sub-scans (default: the client's ``scan_chunk``)
+        so no response — RPC frame or in-memory list — ever covers more
+        than one chunk. Out-of-range bounds raise IndexError from the
+        offending chunk, after any earlier chunks have been yielded."""
+        self._check_open()
+        self._pref(read_preference)  # fail a typo now, not at first chunk
+        lo, hi = int(lo), int(hi)
+        if lo > hi or lo < 0:
+            raise IndexError(f"scan range [{lo}, {hi}) is malformed")
+        step = int(chunk) if chunk else self.scan_chunk
+
+        def _gen():
+            for c_lo in range(lo, hi, step):
+                yield from self.scan(c_lo, min(c_lo + step, hi),
+                                     read_preference=read_preference)
+        return _gen()
+
+    # ----------------------------------------------------------------- writes
+    def append_async(self, s: bytes) -> "Future[int]":
+        self._check_open()
+        t0 = time.perf_counter()
+        if self._service is not None:
+            fut = self._service.submit_append(bytes(s))
+        else:
+            fut = self._submit(self._router_append, bytes(s))
+        return self._tracked(fut, "append", t0, lambda _i: len(s))
+
+    def extend_async(self, strings) -> "Future[list[int]]":
+        """One batched append as a future; local stores fold concurrent
+        extends into single Encoder passes via the service write hook."""
+        self._check_open()
+        t0 = time.perf_counter()
+        strings = [bytes(s) for s in strings]
+        nbytes = self._len_sum(strings)
+        if self._service is not None:
+            fut = self._service.submit_extend(strings)
+        else:
+            fut = self._submit(self._router_extend, strings)
+        return self._tracked(fut, "extend", t0, lambda _ids: nbytes)
+
+    def _router_append(self, s: bytes) -> int:
+        return self.backend.append(s)
+
+    def _router_extend(self, strings: list[bytes]) -> list[int]:
+        return self.backend.extend(strings)
+
+    def append(self, s: bytes, *, timeout: float | None = None) -> int:
+        if self._service is None and timeout is None:
+            s = bytes(s)
+            return self._direct("append", lambda: self.backend.append(s),
+                                lambda _i: len(s))
+        return self.append_async(s).result(
+            self.timeout if timeout is None else timeout)
+
+    def extend(self, strings, *, timeout: float | None = None) -> list[int]:
+        if self._service is None and timeout is None:
+            strings = [bytes(s) for s in strings]
+            nbytes = self._len_sum(strings)
+            return self._direct("extend",
+                                lambda: self.backend.extend(strings),
+                                lambda _ids: nbytes)
+        return self.extend_async(strings).result(
+            self.timeout if timeout is None else timeout)
+
+    # -------------------------------------------------------------- lifecycle
+    def compact(self, shard: int | None = None, **kw):
+        """Re-train + rewrite: the whole store (local), one shard, or every
+        shard (routers). Read-only backends refuse with TypeError."""
+        self._check_open()
+        if not hasattr(self.backend, "compact"):
+            raise TypeError(f"{self.scheme or 'this'} backend is read-only: "
+                            "compact() refused")
+        if self._is_router:
+            return self.backend.compact(shard, **kw)
+        if shard is not None:
+            raise TypeError("shard= targeting requires a shard:// or tcp:// "
+                            "backend")
+        return self.backend.compact(**kw)
+
+    def save(self, dir_path: str | None = None):
+        """Persist the backend: local stores into their directory (or
+        ``dir_path``), routers via their own save protocol."""
+        self._check_open()
+        if self._is_router:
+            if dir_path is not None:
+                raise TypeError("router backends persist in place: "
+                                "save() takes no directory")
+            return self.backend.save()
+        target = dir_path or getattr(self.backend, "_dir", None) or (
+            parse_url(self.url).path if self.url else None)
+        if target is None:
+            raise ValueError("no directory to save into (pass dir_path=)")
+        return self.backend.save(target)
+
+    def register_replica(self, shard: int, address, **client_kw):
+        """Attach a read-only replica to a shard's replica set (tcp://
+        backends only) — the target of replica reads and compaction
+        hand-off."""
+        self._check_open()
+        if not hasattr(self.backend, "register_replica"):
+            raise TypeError("register_replica requires a tcp:// backend")
+        return self.backend.register_replica(shard, address, **client_kw)
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        if self._service is not None:
+            self._service.close()
+        if self._executor is not None:
+            self._executor.shutdown(wait=True)
+        if self._owns_backend and hasattr(self.backend, "close"):
+            self.backend.close()
+
+    def __enter__(self) -> "StoreClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------------------ stats
+    def stats(self) -> dict:
+        """One stats schema across every backend: client-side op counts and
+        ``latency_summary`` / ``throughput_mib_s``, the micro-batching
+        service's ``wakeups`` / adaptive-window state where one exists
+        (local backends; routers report the aggregate of their servers'),
+        and the raw backend snapshot under ``"backend"``."""
+        self._check_open()
+        backend_snap = (self.backend.stats_snapshot()
+                        if hasattr(self.backend, "stats_snapshot")
+                        else self.backend.stats())
+        wakeups = 0
+        max_wait_s = None
+        target_p99_s = None
+        if self._service is not None:
+            svc = self._service.stats()
+            backend_snap = {**backend_snap, "service": svc}
+            wakeups = svc["wakeups"]
+            max_wait_s = svc["max_wait_s"]
+            target_p99_s = svc["target_p99_s"]
+        else:
+            for shard_snap in backend_snap.get("shards", ()):
+                svc = shard_snap.get("service")
+                if svc:  # tcp:// shard servers export their service counters
+                    wakeups += svc.get("wakeups", 0)
+        with self._lock:
+            lat = self._lat.summary()
+            ops = dict(self._ops)
+            moved, busy = self._bytes_moved, self._busy_s
+        return {
+            "scheme": self.scheme,
+            "url": self.url,
+            "n_strings": self.n_strings,
+            "read_preference": self.read_preference,
+            "ops": ops,
+            "latency_summary": lat,
+            "throughput_mib_s": round(throughput_mib_s(moved, busy), 2)
+            if busy else 0.0,
+            "wakeups": wakeups,
+            "max_wait_s": max_wait_s,
+            "target_p99_s": target_p99_s,
+            "backend": backend_snap,
+        }
+
+
+# ------------------------------------------------------------------- factory
+#: connect() options consumed by the client itself (everything else is
+#: forwarded to the backend opener)
+_CLIENT_OPTS = ("timeout", "read_preference", "scan_chunk",
+                "max_async_workers")
+#: options configuring the client-owned StoreService over local stores
+_SERVICE_OPTS = ("max_batch", "max_wait_s", "target_p99_ms", "adapt_window")
+
+
+def _build_service(store, opts: dict) -> StoreService:
+    target_ms = opts.pop("target_p99_ms", None)
+    return StoreService(
+        store,
+        max_batch=opts.pop("max_batch", 256),
+        # latency-first default: drain whatever is queued, never hold a lone
+        # caller hostage to a batching window (the adaptive controller can
+        # re-open the window when target_p99_ms leaves headroom)
+        max_wait_s=opts.pop("max_wait_s", 0.0),
+        target_p99_s=None if target_ms is None else float(target_ms) / 1e3,
+        adapt_window=opts.pop("adapt_window", 64),
+    )
+
+
+def _reject_service_opts(scheme: str, opts: dict) -> None:
+    bad = sorted(k for k in _SERVICE_OPTS if k in opts)
+    if bad:
+        raise TypeError(
+            f"{bad} configure the local micro-batching service and do not "
+            f"apply to {scheme}:// backends — routers have no client-side "
+            "service; set the knobs where the StoreService lives "
+            "(shard servers: --max-wait-s / --target-p99-ms)")
+
+
+def _make_client(backend, parsed: StoreURL, url: str, opts: dict,
+                 owns_backend: bool) -> StoreClient:
+    service = None
+    if not isinstance(backend, ShardRouter):
+        service = _build_service(backend, opts)
+    else:
+        _reject_service_opts(parsed.scheme, opts)
+    client_kw = {k: opts.pop(k) for k in _CLIENT_OPTS if k in opts}
+    if opts:
+        raise TypeError(f"unknown connect() option(s): {sorted(opts)}")
+    return StoreClient(backend, url=url, scheme=parsed.scheme,
+                       owns_backend=owns_backend, service=service,
+                       **client_kw)
+
+
+def connect(url: str, **opts) -> StoreClient:
+    """Resolve a store URL into a ready :class:`StoreClient`.
+
+    ======================  ====================================================
+    scheme                  backend
+    ======================  ====================================================
+    ``file://<dir>``        read-only ``CompressedStringStore.open``
+    ``mut://<dir>``         writable ``MutableStringStore.open``
+    ``shard://<dir>``       in-process ``ShardedStringStore.open``
+                            (``writable=True`` to accept appends)
+    ``tcp://h:p[,h:p...]``  ``DistributedStringStore.connect`` (shard order)
+    ======================  ====================================================
+
+    Options may ride the URL query string or come as keyword arguments
+    (kwargs win): ``timeout=`` (default request timeout, seconds),
+    ``read_preference=`` (default read routing), ``scan_chunk=``,
+    ``target_p99_ms=`` / ``max_wait_s=`` / ``max_batch=`` (the local
+    micro-batching service), plus backend-specific extras (``mmap=``,
+    ``backend=``, ``writable=``, router ``client_kw`` …).
+    """
+    parsed = parse_url(url)
+    opts = {**parsed.options, **opts}
+    client_opts = {k: opts.pop(k) for k in (*_CLIENT_OPTS, *_SERVICE_OPTS)
+                   if k in opts}
+    if parsed.scheme in ("shard", "tcp"):
+        # fail before any backend opens — a rejected option must not leak
+        # half-connected sockets
+        _reject_service_opts(parsed.scheme, client_opts)
+    if parsed.scheme == "file":
+        backend = CompressedStringStore.open(parsed.path, **opts)
+    elif parsed.scheme == "mut":
+        backend = MutableStringStore.open(parsed.path, **opts)
+    elif parsed.scheme == "shard":
+        backend = ShardedStringStore.open(parsed.path, **opts)
+    else:  # tcp
+        from repro.net.router import DistributedStringStore
+
+        if "read_preference" in client_opts:  # the router honours it natively
+            opts.setdefault("read_preference",
+                            client_opts["read_preference"])
+        backend = DistributedStringStore.connect(parsed.addresses, **opts)
+    return _make_client(backend, parsed, url, client_opts, owns_backend=True)
+
+
+def wrap(backend, *, url: str = "", **opts) -> StoreClient:
+    """Wrap an already-open backend (store or router) in the same frozen
+    client surface ``connect()`` returns — for in-memory stores that never
+    touched a URL. The caller keeps ownership: ``close()`` releases the
+    client's service/executor but not the backend."""
+    if isinstance(backend, ShardRouter):
+        scheme = "tcp" if hasattr(backend, "clients") else "shard"
+    elif isinstance(backend, MutableStringStore):
+        scheme = "mut"
+    elif isinstance(backend, CompressedStringStore):
+        scheme = "file"
+    else:
+        raise TypeError(f"cannot wrap {type(backend).__name__}: expected a "
+                        "store or a shard router")
+    parsed = StoreURL(scheme=scheme)
+    return _make_client(backend, parsed, url or f"{scheme}://<wrapped>",
+                        opts, owns_backend=False)

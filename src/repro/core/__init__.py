@@ -15,13 +15,20 @@ API v2 splits the codec into three first-class pieces:
   registry  — codecs constructible by name with capability flags
               (token_stream / bounded_entries / device_decodable / trainable)
 
-``StringCompressor`` and ``ALL_COMPRESSORS`` remain as the back-compat shim
-over those pieces.
+``StringCompressor`` and ``ALL_COMPRESSORS`` remain as a **deprecated**
+back-compat shim over those pieces: accessing either through this package
+emits :class:`DeprecationWarning` (see ``__getattr__`` below) and they are
+scheduled for removal two PRs after Client API v3 (see README "Deprecations"
+for the horizon). Use ``registry.create(name)`` / ``registry.names()`` to
+construct codecs, and subclass ``repro.core.api.StringCompressor`` directly
+when implementing one.
 """
 
+import warnings
+
 from repro.core import registry
-from repro.core.api import (CompressedCorpus, RawCompressor, StringCompressor,
-                            TrainStats, pack_corpus)
+from repro.core.api import (CompressedCorpus, RawCompressor, TrainStats,
+                            pack_corpus)
 from repro.core.artifact import DictArtifact
 from repro.core.blockcomp import ZlibBlockCompressor, ZstdBlockCompressor
 from repro.core.bpe import BPECompressor
@@ -33,24 +40,51 @@ from repro.core.onpair import (MAX_TOKENS, OnPairCompressor, OnPairConfig,
 from repro.core.packed import PackedDictionary
 from repro.core.registry import CodecCaps, CodecSpec
 
-#: Back-compat name->factory view of the registry (pre-v2 callers indexed
-#: this dict directly). Prefer ``registry.create(name)`` going forward.
-ALL_COMPRESSORS = {
-    "raw": registry.get_spec("raw").factory,
-    "zlib-block": registry.get_spec("zlib-block").factory,
-    "zstd-block": registry.get_spec("zstd-block").factory,
-    "lz-block": registry.get_spec("lz-block").factory,
-    "bpe": registry.get_spec("bpe").factory,
-    "fsst": registry.get_spec("fsst").factory,
-    "onpair": registry.get_spec("onpair").factory,
-    "onpair16": registry.get_spec("onpair16").factory,
-}
+def _all_compressors() -> dict:
+    """The pre-v2 name->factory view of the registry."""
+    return {
+        "raw": registry.get_spec("raw").factory,
+        "zlib-block": registry.get_spec("zlib-block").factory,
+        "zstd-block": registry.get_spec("zstd-block").factory,
+        "lz-block": registry.get_spec("lz-block").factory,
+        "bpe": registry.get_spec("bpe").factory,
+        "fsst": registry.get_spec("fsst").factory,
+        "onpair": registry.get_spec("onpair").factory,
+        "onpair16": registry.get_spec("onpair16").factory,
+    }
+
+
+def __getattr__(name: str):
+    """Deprecated back-compat shim: ``ALL_COMPRESSORS`` indexing predates
+    the registry, and ``StringCompressor`` is an implementation base class,
+    not a public constructor surface. Both warn here and will be removed
+    from this namespace on the horizon documented in the README."""
+    if name == "ALL_COMPRESSORS":
+        warnings.warn(
+            "repro.core.ALL_COMPRESSORS is deprecated; use "
+            "repro.core.registry.create(name) (and registry.names() for "
+            "the listing). Removal horizon: two PRs after Client API v3 — "
+            "see README 'Deprecations'.",
+            DeprecationWarning, stacklevel=2)
+        return _all_compressors()
+    if name == "StringCompressor":
+        warnings.warn(
+            "importing StringCompressor from repro.core is deprecated; "
+            "construct codecs via repro.core.registry and subclass "
+            "repro.core.api.StringCompressor when implementing one. "
+            "Removal horizon: two PRs after Client API v3 — see README "
+            "'Deprecations'.",
+            DeprecationWarning, stacklevel=2)
+        from repro.core.api import StringCompressor
+        return StringCompressor
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 
 __all__ = [
-    "CompressedCorpus", "RawCompressor", "StringCompressor", "TrainStats",
+    "CompressedCorpus", "RawCompressor", "TrainStats",
     "pack_corpus", "ZlibBlockCompressor", "ZstdBlockCompressor",
     "BPECompressor", "FSSTCompressor", "OnPairCompressor", "OnPairConfig",
     "MAX_TOKENS", "auto_threshold", "make_onpair", "make_onpair16",
-    "train_dictionary", "PackedDictionary", "ALL_COMPRESSORS",
+    "train_dictionary", "PackedDictionary",
     "DictArtifact", "Encoder", "Decoder", "registry", "CodecCaps", "CodecSpec",
 ]

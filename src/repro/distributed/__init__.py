@@ -7,9 +7,11 @@ needed to write or serve shards).
 lazily by their callers so a numpy-only host can still shard and serve.
 """
 
-from repro.distributed.shard_store import (ShardedStringStore, ShardRouter,
-                                           open_shard, plan_shards,
-                                           save_sharded)
+from repro.distributed.shard_store import (READ_PREFERENCES,
+                                           ShardedStringStore, ShardRouter,
+                                           check_read_preference, open_shard,
+                                           plan_shards, save_sharded)
 
-__all__ = ["ShardRouter", "ShardedStringStore", "open_shard", "plan_shards",
+__all__ = ["READ_PREFERENCES", "ShardRouter", "ShardedStringStore",
+           "check_read_preference", "open_shard", "plan_shards",
            "save_sharded"]

@@ -35,6 +35,16 @@ from repro.store.store import CompressedStringStore, write_json_atomic
 MANIFEST = "shards.json"
 DICT_FILE = "dictionary.rpa"
 
+#: the read-routing policies every router (and the client layer) understands
+READ_PREFERENCES = ("primary", "replica", "any")
+
+
+def check_read_preference(pref: str) -> str:
+    if pref not in READ_PREFERENCES:
+        raise ValueError(f"read_preference must be one of {READ_PREFERENCES},"
+                         f" got {pref!r}")
+    return pref
+
 
 def plan_shards(n_strings: int, strings_per_segment: int,
                 n_shards: int) -> list[tuple[int, int]]:
@@ -135,12 +145,22 @@ class ShardRouter:
     in-process and the RPC router must honour — order-preserving multiget
     reassembly, segment-respecting scans, and append bounds that only ever
     grow the LAST shard (the owner of the global id space's tail).
+
+    Every read takes a ``read_preference`` (``"primary"`` | ``"replica"`` |
+    ``"any"``; None = the router's default) that flows through to the
+    per-shard data plane. The base router has no replicas, so every
+    preference resolves to the primary — the RPC router overrides the
+    resolution with replica-set round-robin (see
+    ``repro.net.router.DistributedStringStore``). Accepting the option here
+    keeps the client surface identical across deployment shapes.
     """
 
     def __init__(self, bounds: list[tuple[int, int]],
-                 dir_path: str | None = None):
+                 dir_path: str | None = None,
+                 read_preference: str = "primary"):
         self.bounds = [tuple(b) for b in bounds]
         self.n_strings = self.bounds[-1][1] if self.bounds else 0
+        self.read_preference = check_read_preference(read_preference)
         self._dir = dir_path
         self._write_lock = threading.Lock()  # serialises bound updates
 
@@ -152,10 +172,12 @@ class ShardRouter:
         return self.n_strings
 
     # ------------------------------------------------------------- data plane
-    def _shard_multiget(self, k: int, local_ids: list[int]) -> list[bytes]:
+    def _shard_multiget(self, k: int, local_ids: list[int],
+                        read_preference: str | None = None) -> list[bytes]:
         raise NotImplementedError
 
-    def _shard_scan(self, k: int, lo: int, hi: int) -> list[bytes]:
+    def _shard_scan(self, k: int, lo: int, hi: int,
+                    read_preference: str | None = None) -> list[bytes]:
         raise NotImplementedError
 
     def _shard_stats(self, k: int) -> dict:
@@ -165,11 +187,13 @@ class ShardRouter:
         """Append to the tail shard; returns (local ids, new local count)."""
         raise NotImplementedError
 
-    def _fanout_multiget(self, jobs: list[tuple[int, list[int]]]
+    def _fanout_multiget(self, jobs: list[tuple[int, list[int]]],
+                         read_preference: str | None = None
                          ) -> list[list[bytes]]:
         """Answer one multiget job per shard. Sequential here; the RPC
         router overrides this with a concurrent per-connection fan-out."""
-        return [self._shard_multiget(k, local_ids) for k, local_ids in jobs]
+        return [self._shard_multiget(k, local_ids, read_preference)
+                for k, local_ids in jobs]
 
     # ---------------------------------------------------------------- routing
     def route(self, gid: int) -> tuple[int, int]:
@@ -181,11 +205,12 @@ class ShardRouter:
                 return k, gid - lo
         raise IndexError(f"string id {gid} not covered by any shard")
 
-    def get(self, gid: int) -> bytes:
+    def get(self, gid: int, *, read_preference: str | None = None) -> bytes:
         k, local = self.route(gid)
-        return self._shard_multiget(k, [local])[0]
+        return self._shard_multiget(k, [local], read_preference)[0]
 
-    def multiget(self, ids) -> list[bytes]:
+    def multiget(self, ids, *,
+                 read_preference: str | None = None) -> list[bytes]:
         """Order-preserving batched lookup: ids partition per shard, each
         shard answers with ONE batched decode, answers reassemble into
         request order."""
@@ -197,12 +222,14 @@ class ShardRouter:
                 for k, positions in per_shard.items()]
         out: list[bytes | None] = [None] * len(routed)
         for (_, positions), got in zip(per_shard.items(),
-                                       self._fanout_multiget(jobs)):
+                                       self._fanout_multiget(
+                                           jobs, read_preference)):
             for p, v in zip(positions, got):
                 out[p] = v
         return out  # type: ignore[return-value]
 
-    def scan(self, lo: int, hi: int) -> list[bytes]:
+    def scan(self, lo: int, hi: int, *,
+             read_preference: str | None = None) -> list[bytes]:
         """Decode the contiguous global id range [lo, hi): each shard scans
         its covered sub-range, results concatenate in id order."""
         if not (0 <= lo <= hi <= self.n_strings):
@@ -212,7 +239,8 @@ class ShardRouter:
         for k, (s_lo, s_hi) in enumerate(self.bounds):
             a, b = max(lo, s_lo), min(hi, s_hi)
             if a < b:
-                out.extend(self._shard_scan(k, a - s_lo, b - s_lo))
+                out.extend(self._shard_scan(k, a - s_lo, b - s_lo,
+                                            read_preference))
         return out
 
     def stats_snapshot(self) -> dict:
@@ -288,10 +316,14 @@ class ShardedStringStore(ShardRouter):
         return cls(stores, bounds, dir_path=dir_path)
 
     # ------------------------------------------------------------- data plane
-    def _shard_multiget(self, k: int, local_ids: list[int]) -> list[bytes]:
+    # every shard store lives in this process, so there is nothing to prefer:
+    # each shard IS its own primary and read_preference resolves to it
+    def _shard_multiget(self, k: int, local_ids: list[int],
+                        read_preference: str | None = None) -> list[bytes]:
         return self.stores[k].multiget(local_ids)
 
-    def _shard_scan(self, k: int, lo: int, hi: int) -> list[bytes]:
+    def _shard_scan(self, k: int, lo: int, hi: int,
+                    read_preference: str | None = None) -> list[bytes]:
         return self.stores[k].scan(lo, hi)
 
     def _shard_stats(self, k: int) -> dict:

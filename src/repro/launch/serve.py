@@ -80,21 +80,23 @@ def main() -> None:
     if args.smoke:
         cfg = cfg.smoke()
 
-    store = None
+    client = None
     if args.store_dir:
-        # persisted-store path: the saved dictionary artifact IS the vocab —
-        # nothing is retrained, the host just opens the directory
+        # persisted-store path through the v3 client layer: the store URL
+        # decides the backend (writable vs read-only here; a sharded dir or
+        # a remote cluster would be the same call with another scheme), and
+        # the saved dictionary artifact IS the vocab — nothing is retrained
+        from repro.client import connect
         from repro.core import registry
-        from repro.store import CompressedStringStore, MutableStringStore
-        store_cls = MutableStringStore if args.writable else CompressedStringStore
-        store = store_cls.open(args.store_dir)
-        codec = registry.resolve(store.artifact.codec)
+        scheme = "mut" if args.writable else "file"
+        client = connect(f"{scheme}://{args.store_dir}")
+        codec = registry.resolve(client.backend.artifact.codec)
         if codec not in ("onpair", "onpair16"):
             raise SystemExit(
                 f"--store-dir: store was built with codec {codec!r}; the LM "
                 "tokenizer vocabulary is an OnPair dictionary — rebuild the "
                 "store with codec='onpair16'")
-        tok = OnPairTokenizer.from_artifact(store.artifact)
+        tok = OnPairTokenizer.from_artifact(client.backend.artifact)
     else:
         # OnPair tokenizer trained on a small corpus (vocab == dictionary)
         corpus_strings = load_dataset("book_titles", 1 << 20)
@@ -105,13 +107,13 @@ def main() -> None:
 
     if args.append:
         # ingest path: parse new docs against the store's frozen dictionary
-        if store is None or not args.writable:
+        if client is None or not args.writable:
             raise SystemExit("--append requires --store-dir with --writable")
-        new_ids = store.extend([d.encode() for d in args.append])
-        store.save(args.store_dir)  # ingest is durable, not in-memory only
-        drift = store.drift.snapshot()
+        new_ids = client.extend([d.encode() for d in args.append])
+        client.save()  # ingest is durable, not in-memory only
+        drift = client.backend.drift.snapshot()
         print(f"appended {len(new_ids)} docs (ids {new_ids[0]}..{new_ids[-1]}), "
-              f"tail {store.stats_snapshot()['n_tail_strings']} strings, "
+              f"tail {client.stats()['backend']['n_tail_strings']} strings, "
               f"saved to {args.store_dir}, drift {drift['drift']:.3f} "
               f"(compact recommended: {drift['should_compact']})")
         args.doc_ids = list(args.doc_ids or []) + new_ids
@@ -120,17 +122,18 @@ def main() -> None:
     if args.doc_ids:
         # corpus path: the store answers the prompt fetch as one batched,
         # length-bucketed kernel decode over the compressed payload
-        if store is None:
+        if client is None:
+            from repro.client import wrap
             from repro.core.codec import Encoder
             from repro.store import CompressedStringStore
             artifact = tok.to_artifact()
-            store = CompressedStringStore(
-                artifact, Encoder(artifact).encode(corpus_strings))
-        docs = store.multiget(args.doc_ids)
+            client = wrap(CompressedStringStore(
+                artifact, Encoder(artifact).encode(corpus_strings)))
+        docs = client.multiget(args.doc_ids)
         prompt_bytes += docs
         # display names only; latin-1 roundtrips arbitrary doc bytes
         args.prompts = list(args.prompts) + [d.decode("latin-1") for d in docs]
-        snap = store.stats_snapshot()
+        snap = client.stats()["backend"]
         print(f"store: {snap['n_strings']} docs in {snap['n_segments']} "
               f"segments ({snap['backend']} backend), fetched "
               f"{len(docs)} prompts, jit shapes {snap['jit_shapes']}")

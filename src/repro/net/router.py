@@ -21,6 +21,17 @@ appends targeting the shard park in a bounded retry queue; when the primary
 returns (its new ``current.json`` generation is published at that point),
 queued appends replay in arrival order and their callers get their ids —
 acknowledged appends are never lost, and reads never wait on the rewrite.
+
+Replica read load-balancing (ROADMAP): replicas are a *set* per shard, and
+``read_preference`` routes reads across it outside compaction windows too —
+``"replica"`` round-robins reads over the shard's covering replicas (falling
+back to the primary when none is registered or none covers the requested
+ids), ``"any"`` round-robins over primary + covering replicas, ``"primary"``
+keeps the pre-v3 behaviour. The staleness guard is generational: a replica
+serves the generation it opened, so it is only eligible for a read whose
+ids it provably holds (its ``n_strings`` at registration / last compact
+refresh); anything newer — appends acknowledged after the replica opened —
+must come from the primary.
 """
 
 from __future__ import annotations
@@ -33,7 +44,11 @@ import threading
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
 
-from repro.distributed.shard_store import MANIFEST, ShardRouter
+from repro.distributed.shard_store import (
+    MANIFEST,
+    ShardRouter,
+    check_read_preference,
+)
 from repro.net import protocol as P
 from repro.store.store import write_json_atomic
 
@@ -217,10 +232,12 @@ class DistributedStringStore(ShardRouter):
         max_workers: int | None = None,
         max_pending_appends: int = 1024,
         scan_chunk: int = 4096,
+        read_preference: str = "primary",
     ):
         if len(clients) != len(bounds):
             raise ValueError("one client per shard bound required")
-        super().__init__(bounds, dir_path=dir_path)
+        super().__init__(bounds, dir_path=dir_path,
+                         read_preference=read_preference)
         self.clients = clients
         self.max_pending_appends = int(max_pending_appends)
         self.scan_chunk = int(scan_chunk)
@@ -228,8 +245,11 @@ class DistributedStringStore(ShardRouter):
             max_workers=max_workers or min(32, 2 * max(1, len(clients))),
             thread_name_prefix="dstore",
         )
-        self._replicas: dict[int, RemoteShardClient] = {}
-        self._replica_n: dict[int, int] = {}
+        #: per-shard replica SET: [client, covered_n_strings] pairs. The
+        #: covered count is the generational staleness guard — a replica is
+        #: only eligible for reads it provably holds.
+        self._replicas: dict[int, list[list]] = {}
+        self._rr: dict[int, int] = {}  # round-robin cursors (races benign)
         self._draining: dict[int, bool] = {}
         self._pending: dict[int, queue.Queue] = {}
         self._flush_locks: dict[int, threading.Lock] = {}
@@ -248,21 +268,30 @@ class DistributedStringStore(ShardRouter):
         ``n_strings`` and the contiguous global bounds are derived — the
         live-cluster equivalent of reading the manifest."""
         clients = [RemoteShardClient(a, **(client_kw or {})) for a in addresses]
-        if bounds is None:
-            bounds = []
-            lo = 0
+        try:
+            if bounds is None:
+                bounds = []
+                lo = 0
+                for c in clients:
+                    n = c.n_strings
+                    bounds.append((lo, lo + n))
+                    lo += n
+            return cls(clients, bounds, dir_path=dir_path, **kw)
+        except BaseException:
+            # bounds derivation already opened sockets (n_strings is an
+            # RPC); a dead shard or a bad constructor kwarg must not leak
+            # the ones that connected
             for c in clients:
-                n = c.n_strings
-                bounds.append((lo, lo + n))
-                lo += n
-        return cls(clients, bounds, dir_path=dir_path, **kw)
+                c.close()
+            raise
 
     def close(self) -> None:
         self._pool.shutdown(wait=False)
         for c in self.clients:
             c.close()
-        for c in self._replicas.values():
-            c.close()
+        for replicas in self._replicas.values():
+            for c, _ in replicas:
+                c.close()
 
     def __enter__(self) -> "DistributedStringStore":
         return self
@@ -271,40 +300,80 @@ class DistributedStringStore(ShardRouter):
         self.close()
 
     # ------------------------------------------------------------- data plane
-    def _read_client(self, k: int, max_local: int) -> RemoteShardClient:
-        """The primary, unless shard k is draining into a replica that
-        covers every requested id (replicas only hold the generation they
-        opened; newer appends must still come from the primary)."""
-        if self._draining.get(k):
-            replica = self._replicas.get(k)
-            if replica is not None and max_local < self._replica_n.get(k, 0):
-                return replica
+    def _covering_replicas(self, k: int, max_local: int) -> list[RemoteShardClient]:
+        """Replicas of shard k whose registered generation holds every
+        requested id (the staleness guard: a replica serves the generation
+        it opened, so ids at or beyond its covered count must come from the
+        primary)."""
+        return [c for c, n in self._replicas.get(k, ()) if max_local < n]
+
+    def _round_robin(
+        self, k: int, candidates: list[RemoteShardClient]
+    ) -> RemoteShardClient:
+        cursor = self._rr.get(k, 0)
+        self._rr[k] = cursor + 1
+        return candidates[cursor % len(candidates)]
+
+    def _read_client(
+        self, k: int, max_local: int, read_preference: str | None = None
+    ) -> RemoteShardClient:
+        """Resolve which server answers a read of shard ``k``.
+
+        While the shard drains (compact in flight) any covering replica wins
+        regardless of preference — that is the hand-off. Otherwise
+        ``read_preference`` decides: ``replica`` round-robins over covering
+        replicas (primary as fallback), ``any`` round-robins over primary +
+        covering replicas, ``primary`` (default) always hits the primary.
+        """
+        pref = check_read_preference(read_preference or self.read_preference)
+        covering = self._covering_replicas(k, max_local)
+        if covering:
+            if self._draining.get(k) or pref == "replica":
+                return self._round_robin(k, covering)
+            if pref == "any":
+                return self._round_robin(k, [self.clients[k]] + covering)
         return self.clients[k]
 
-    def _shard_multiget(self, k: int, local_ids: list[int]) -> list[bytes]:
-        client = self._read_client(k, max(local_ids) if local_ids else -1)
+    def _shard_multiget(
+        self, k: int, local_ids: list[int], read_preference: str | None = None
+    ) -> list[bytes]:
+        client = self._read_client(
+            k, max(local_ids) if local_ids else -1, read_preference
+        )
         return client.multiget(local_ids)
 
-    def _shard_scan(self, k: int, lo: int, hi: int) -> list[bytes]:
+    def _shard_scan(
+        self, k: int, lo: int, hi: int, read_preference: str | None = None
+    ) -> list[bytes]:
         """Range decode in bounded-count chunks: one giant scan response
         would trip the protocol's max_frame refusal; N modest RPCs stream
         the same bytes."""
-        client = self._read_client(k, hi - 1)
         out: list[bytes] = []
         for c_lo in range(lo, hi, self.scan_chunk):
-            out.extend(client.scan(c_lo, min(c_lo + self.scan_chunk, hi)))
+            c_hi = min(c_lo + self.scan_chunk, hi)
+            # re-resolve per chunk so replica round-robin spreads a long
+            # scan across the whole replica set
+            client = self._read_client(k, c_hi - 1, read_preference)
+            out.extend(client.scan(c_lo, c_hi))
         return out
 
     def _shard_stats(self, k: int) -> dict:
         return self.clients[k].stats()
 
-    def _fanout_multiget(self, jobs: list[tuple[int, list[int]]]) -> list[list[bytes]]:
+    def _fanout_multiget(
+        self,
+        jobs: list[tuple[int, list[int]]],
+        read_preference: str | None = None,
+    ) -> list[list[bytes]]:
         """Per-shard fan-out on the pool: one RPC per touched shard, all in
         flight concurrently; reassembly order is the caller's job list."""
         if len(jobs) == 1:  # don't pay executor latency for one shard
             k, local_ids = jobs[0]
-            return [self._shard_multiget(k, local_ids)]
-        futs = [self._pool.submit(self._shard_multiget, k, lids) for k, lids in jobs]
+            return [self._shard_multiget(k, local_ids, read_preference)]
+        futs = [
+            self._pool.submit(self._shard_multiget, k, lids, read_preference)
+            for k, lids in jobs
+        ]
         return [f.result() for f in futs]
 
     def _tail_extend(self, strings: list[bytes]) -> tuple[list[int], int]:
@@ -365,9 +434,11 @@ class DistributedStringStore(ShardRouter):
     def register_replica(
         self, shard: int, address: tuple[str, int], **client_kw
     ) -> RemoteShardClient:
-        """Attach a read-only replica server to ``shard`` (opened from the
-        same directory's current versioned generation). Reads drain to it
-        during that shard's ``compact()``."""
+        """Attach a read-only replica server to ``shard``'s replica set
+        (opened from the same directory's current versioned generation).
+        Reads drain to the set during that shard's ``compact()``, and
+        ``read_preference="replica"|"any"`` round-robins reads across it at
+        any time."""
         client = RemoteShardClient(address, **client_kw)
         stats = client.stats()
         if stats.get("writable"):
@@ -375,9 +446,15 @@ class DistributedStringStore(ShardRouter):
                 f"replica for shard {shard} at {address} is writable — "
                 "replicas must be started with --read-only"
             )
-        self._replicas[shard] = client
-        self._replica_n[shard] = int(stats["n_strings"])
+        self._replicas.setdefault(shard, []).append([client, int(stats["n_strings"])])
         return client
+
+    def refresh_replicas(self, shard: int) -> None:
+        """Re-read each replica's covered count (the staleness guard) — a
+        replica restarted from a newer generation becomes eligible for the
+        ids it now holds."""
+        for pair in self._replicas.get(shard, ()):
+            pair[1] = pair[0].n_strings
 
     def compact(self, shard: int | None = None, **kw) -> list[dict]:
         """Compact one shard (or all). With a registered replica the shard
@@ -388,11 +465,10 @@ class DistributedStringStore(ShardRouter):
         return [self._compact_one(k, **kw) for k in targets]
 
     def _compact_one(self, k: int, **kw) -> dict:
-        replica = self._replicas.get(k)
-        if replica is None:
+        if not self._replicas.get(k):
             return self.clients[k].compact(**kw)
-        # refresh coverage: the replica serves ids it had when it opened
-        self._replica_n[k] = replica.n_strings
+        # refresh coverage: each replica serves ids it had when it opened
+        self.refresh_replicas(k)
         self._pending.setdefault(k, queue.Queue(maxsize=self.max_pending_appends))
         self._flush_locks.setdefault(k, threading.Lock())
         self._draining[k] = True

@@ -29,6 +29,7 @@ on the numpy decode path (fast startup; what a CPU-only serving host runs).
 from __future__ import annotations
 
 import argparse
+import collections
 import json
 import os
 import re
@@ -127,10 +128,23 @@ class ShardServer:
         max_batch: int = 256,
         max_wait_s: float = 0.0005,
         max_frame: int = P.DEFAULT_MAX_FRAME,
+        target_p99_s: float | None = None,
     ):
         self.store = store
         self.max_frame = int(max_frame)
-        self.service = StoreService(store, max_batch=max_batch, max_wait_s=max_wait_s)
+        self.service = StoreService(
+            store,
+            max_batch=max_batch,
+            max_wait_s=max_wait_s,
+            target_p99_s=target_p99_s,
+        )
+        #: per-op request counts, exported via stats() — the observability a
+        #: router-side test (or operator) uses to see WHICH server answered.
+        #: Incremented under a lock: dispatch() runs concurrently on
+        #: per-connection handler threads, and a lost increment would make
+        #: replica-routing assertions flake.
+        self.op_counts: collections.Counter = collections.Counter()
+        self._op_lock = threading.Lock()
         self._tcp = _TCPServer((host, port), _Handler)
         self._tcp.shard_server = self  # type: ignore[attr-defined]
         self._thread: threading.Thread | None = None
@@ -146,7 +160,9 @@ class ShardServer:
         **kw,
     ) -> "ShardServer":
         service_kw = {
-            k: kw.pop(k) for k in ("max_batch", "max_wait_s", "max_frame") if k in kw
+            k: kw.pop(k)
+            for k in ("max_batch", "max_wait_s", "max_frame", "target_p99_s")
+            if k in kw
         }
         store = open_serving_store(path, read_only=read_only, **kw)
         return cls(store, host=host, port=port, **service_kw)
@@ -189,6 +205,8 @@ class ShardServer:
 
     # ---------------------------------------------------------------- dispatch
     def dispatch(self, kind: int, payload: bytes) -> bytes:
+        with self._op_lock:
+            self.op_counts[P.OP_NAMES.get(kind, hex(kind))] += 1
         if kind == P.OP_PING:
             return payload
         if kind == P.OP_GET:
@@ -225,9 +243,12 @@ class ShardServer:
         raise P.ProtocolError(f"unknown op 0x{kind:02x}")
 
     def stats(self) -> dict:
+        with self._op_lock:
+            ops = dict(self.op_counts)
         return {
             "n_strings": self.store.n_strings,
             "writable": hasattr(self.store, "extend"),
+            "ops": ops,
             "store": self.store.stats_snapshot(),
             "service": self.service.stats(),
         }
@@ -240,6 +261,7 @@ def run(
     read_only: bool = False,
     max_batch: int = 256,
     max_wait_s: float = 0.0005,
+    target_p99_s: float | None = None,
     announce: bool = True,
 ) -> None:
     """Open the store, print the readiness line, serve until interrupted."""
@@ -250,6 +272,7 @@ def run(
         port=port,
         max_batch=max_batch,
         max_wait_s=max_wait_s,
+        target_p99_s=target_p99_s,
     )
     if announce:
         print(
@@ -279,6 +302,14 @@ def main(argv=None) -> None:
     )
     ap.add_argument("--max-batch", type=int, default=256)
     ap.add_argument("--max-wait-s", type=float, default=0.0005)
+    ap.add_argument(
+        "--target-p99-ms",
+        type=float,
+        default=None,
+        help="enable the adaptive micro-batching window: the service tunes "
+        "max_wait_s toward the largest value whose observed request p99 "
+        "stays under this target",
+    )
     args = ap.parse_args(argv)
     run(
         args.dir,
@@ -287,6 +318,9 @@ def main(argv=None) -> None:
         read_only=args.read_only,
         max_batch=args.max_batch,
         max_wait_s=args.max_wait_s,
+        target_p99_s=(
+            None if args.target_p99_ms is None else args.target_p99_ms / 1e3
+        ),
     )
 
 

@@ -25,6 +25,15 @@ composes across connections.
 The worker blocks on the queue (no idle polling): ``close()`` wakes it with
 a sentinel. ``wakeups`` counts worker wakeups and therefore stays 0 while
 the service is idle — tests assert on it to keep the no-busy-wait property.
+
+``max_wait_s`` — the micro-batching window — is either a fixed knob (the
+pre-v3 behaviour) or, when ``target_p99_s`` is set, the output of a small
+feedback controller: the worker keeps a window of recent request latencies
+and, every ``adapt_window`` requests, halves the wait when the observed p99
+overshoots the target and doubles it (up to ``max_wait_cap_s``) when p99
+sits below half the target — trading latency headroom for larger coalesced
+batches only when the target allows it. The current wait, the target and
+the adjustment count are all visible in :meth:`stats`.
 """
 
 from __future__ import annotations
@@ -41,11 +50,21 @@ from repro.store.store import CompressedStringStore
 class StoreService:
     """Thread-safe coalescing front-end: ``submit(i) -> Future[bytes]``."""
 
+    #: adaptive-controller floor: below this the wait snaps to 0 (drain-only)
+    _MIN_WAIT_S = 5e-5
+
     def __init__(self, store: CompressedStringStore, max_batch: int = 256,
-                 max_wait_s: float = 0.0005):
+                 max_wait_s: float = 0.0005, target_p99_s: float | None = None,
+                 adapt_window: int = 64, max_wait_cap_s: float = 0.01):
         self.store = store
         self.max_batch = int(max_batch)
         self.max_wait_s = float(max_wait_s)
+        self.target_p99_s = (None if target_p99_s is None
+                             else float(target_p99_s))
+        self.adapt_window = max(8, int(adapt_window))
+        self.max_wait_cap_s = float(max_wait_cap_s)
+        self.wait_adjustments = 0   # times the controller moved max_wait_s
+        self._adapt_win: list[float] = []  # latencies since the last adapt
         self._q: queue.SimpleQueue = queue.SimpleQueue()
         self._stop = threading.Event()
         self._submit_lock = threading.Lock()  # orders submit() vs close()
@@ -174,6 +193,9 @@ class StoreService:
                 "appends": self.appends,
                 "append_batches": self.append_batches,
                 "wakeups": self.wakeups,
+                "max_wait_s": self.max_wait_s,
+                "target_p99_s": self.target_p99_s,
+                "wait_adjustments": self.wait_adjustments,
                 "request_latency": lat}
 
     # ----------------------------------------------------------------- worker
@@ -203,7 +225,7 @@ class StoreService:
                 item = self._q.get_nowait()
             except queue.Empty:
                 return
-            if item is not None:
+            if item is not None and item[2].set_running_or_notify_cancel():
                 item[2].set_exception(RuntimeError("service is closed"))
 
     def _run(self) -> None:
@@ -215,7 +237,10 @@ class StoreService:
                 self._drain_and_fail()
                 return
             self.wakeups += 1
-            batch = self._collect_batch(item)
+            raw = self._collect_batch(item)
+            # cancelled futures drop out here; surviving ones flip to RUNNING
+            # so a late cancel() cannot race set_result below
+            batch = [b for b in raw if b[2].set_running_or_notify_cancel()]
             # writes first: a client holding an id from a resolved append can
             # immediately read it back through the next batch
             writes = [b for b in batch if b[0] in ("append", "extend")]
@@ -225,9 +250,12 @@ class StoreService:
             if reads:
                 self._serve_reads(reads)
             done = time.perf_counter()
+            lats = [done - t for _, _, _, t in batch]
             with self._lat_lock:
-                for _, _, _, t in batch:
-                    self._lat.record(done - t)
+                for dt in lats:
+                    self._lat.record(dt)
+            if self.target_p99_s is not None:
+                self._adapt_wait(lats)
             if len(batch) > 1:
                 self.coalesced += len(batch)
             self.batches += 1
@@ -237,6 +265,29 @@ class StoreService:
                 # looping back to the blocking get would hang forever
                 self._drain_and_fail()
                 return
+
+    def _adapt_wait(self, lats: list[float]) -> None:
+        """Latency-aware controller: every ``adapt_window`` answered requests,
+        move ``max_wait_s`` toward the largest batching window that still
+        meets ``target_p99_s`` (ROADMAP: drive the knob from the service's
+        own latency counters). Multiplicative so it converges in a handful of
+        windows; bounded by ``max_wait_cap_s``; snaps to 0 below _MIN_WAIT_S
+        (a sub-50us window buys no coalescing but still costs a timed get)."""
+        self._adapt_win.extend(lats)
+        if len(self._adapt_win) < self.adapt_window:
+            return
+        win = sorted(self._adapt_win)
+        self._adapt_win.clear()
+        p99 = win[min(len(win) - 1, int(0.99 * len(win)))]
+        old = self.max_wait_s
+        if p99 > self.target_p99_s:
+            new = self.max_wait_s / 2
+            self.max_wait_s = new if new >= self._MIN_WAIT_S else 0.0
+        elif p99 < self.target_p99_s / 2:
+            self.max_wait_s = min(max(self.max_wait_s * 2, self._MIN_WAIT_S),
+                                  self.max_wait_cap_s)
+        if self.max_wait_s != old:
+            self.wait_adjustments += 1
 
     def _serve_writes(self, writes: list) -> None:
         """Fold every append/extend in the drained batch into ONE

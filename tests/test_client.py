@@ -1,0 +1,502 @@
+"""Tests for repro.client — Client API v3.
+
+URL parsing, the acceptance byte-identity criterion (one corpus served via
+file:// vs shard:// vs tcp:// answers identical bytes), the unified stats
+schema (key-set equality across all four backends), failure semantics
+through the async path (cancelled/timed-out futures, IndexError through
+scan_iter, replica fallback), replica read-preference routing asserted via
+server-side op counters while a live compact() is in flight, the adaptive
+max_wait_s controller, and client-level reconnect across a server
+kill/restart (the PR 4 subprocess harness).
+
+Stdlib + numpy only — the client layer must work on jax-less serving hosts.
+"""
+
+import os
+import re
+import subprocess
+import sys
+import threading
+import time
+from concurrent.futures import TimeoutError as FuturesTimeout
+
+import numpy as np
+import pytest
+
+from repro.client import StoreClient, connect, format_tcp_url, parse_url, wrap
+from repro.data.synth import load_dataset
+from repro.distributed import save_sharded
+from repro.net import ShardServer
+from repro.net import protocol as P
+from repro.store import CompressedStringStore, MutableStringStore, StoreService
+
+SAMPLE = 1 << 18
+SRC_DIR = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(P.__file__))))
+CHILD_ENV = {**os.environ, "PYTHONPATH": SRC_DIR, "REPRO_NO_JAX": "1"}
+
+
+@pytest.fixture(scope="module")
+def titles():
+    strings = load_dataset("book_titles", SAMPLE)
+    strings[3] = b""
+    strings[7] = b"\x00\xff" * 9
+    return strings
+
+
+@pytest.fixture(scope="module")
+def corpus_dirs(titles, tmp_path_factory):
+    """One corpus persisted three ways: flat store dir, versioned mutable
+    dir, and a 3-shard sharded dir — the backends behind file:// mut://
+    shard:// (and, served, tcp://)."""
+    store = CompressedStringStore.build(
+        titles, sample_bytes=SAMPLE, strings_per_segment=256
+    )
+    base = tmp_path_factory.mktemp("client")
+    flat = str(base / "flat")
+    store.save(flat)
+    mut = str(base / "mut")
+    MutableStringStore.open(flat).save(mut)
+    sharded = str(base / "shards")
+    save_sharded(store, sharded, 3)
+    return {"flat": flat, "mut": mut, "sharded": sharded}
+
+
+@pytest.fixture(scope="module")
+def cluster(corpus_dirs):
+    """In-thread shard servers over the sharded dir + a tcp:// client."""
+    servers = [
+        ShardServer.from_dir(
+            os.path.join(corpus_dirs["sharded"], f"shard-{k:04d}")
+        ).start()
+        for k in range(3)
+    ]
+    url = format_tcp_url([s.address for s in servers])
+    client = connect(url, dir_path=corpus_dirs["sharded"])
+    yield client, servers
+    client.close()
+    for s in servers:
+        s.close()
+
+
+# ------------------------------------------------------------------- parsing
+def test_parse_url_schemes():
+    u = parse_url("file:///data/store")
+    assert (u.scheme, u.path) == ("file", "/data/store")
+    u = parse_url("mut://rel/dir?mmap=false")
+    assert (u.scheme, u.path, u.options) == ("mut", "rel/dir", {"mmap": False})
+    u = parse_url("tcp://h0:9100,h1:9101?read_preference=replica&timeout=5")
+    assert u.addresses == [("h0", 9100), ("h1", 9101)]
+    assert u.options == {"read_preference": "replica", "timeout": 5}
+    with pytest.raises(ValueError, match="unsupported store url"):
+        parse_url("bogus://x")
+    with pytest.raises(ValueError, match="no host:port"):
+        parse_url("tcp://")
+    with pytest.raises(ValueError, match="host:port"):
+        parse_url("tcp://justahost")
+    with pytest.raises(ValueError, match="no directory"):
+        parse_url("file://")
+
+
+def test_connect_rejects_unknown_options(corpus_dirs):
+    # unrecognised options forward to the backend opener and fail loudly
+    # there (TypeError), never silently vanish
+    with pytest.raises(TypeError, match="frobnicate"):
+        connect(f"file://{corpus_dirs['flat']}", frobnicate=3)
+    # service knobs on a router URL are a loud TypeError too — routers have
+    # no client-side StoreService, so accepting the option would be a no-op
+    with pytest.raises(TypeError, match="target_p99_ms"):
+        connect(f"shard://{corpus_dirs['sharded']}", target_p99_ms=2.0)
+    with pytest.raises(TypeError, match="max_wait_s"):
+        connect("tcp://127.0.0.1:1?max_wait_s=0.01")  # pre-connect check
+
+
+# -------------------------------------------------- acceptance: byte identity
+def test_byte_identity_across_backends(cluster, corpus_dirs, titles):
+    """The same corpus served via connect('file://'), connect('shard://')
+    and connect('tcp://') returns identical bytes for get/multiget/scan."""
+    tcp_client, _ = cluster
+    rng = np.random.default_rng(0)
+    ids = rng.integers(0, len(titles), 500).tolist() + [3, 7, len(titles) - 1]
+    lo, hi = len(titles) // 3 - 40, len(titles) // 3 + 40  # shard straddle
+    with connect(f"file://{corpus_dirs['flat']}") as file_client, \
+            connect(f"shard://{corpus_dirs['sharded']}") as shard_client:
+        expect = [titles[i] for i in ids]
+        for client in (file_client, shard_client, tcp_client):
+            assert client.multiget(ids) == expect
+            assert client.get(7) == titles[7]
+            assert client.scan(lo, hi) == titles[lo:hi]
+            assert list(client.scan_iter(lo, hi, chunk=16)) == titles[lo:hi]
+            assert len(client) == len(titles)
+        # read_preference is part of the frozen surface on every backend
+        # (no replicas anywhere here, so every preference hits primaries)
+        for pref in ("primary", "replica", "any"):
+            assert shard_client.multiget(ids[:5], read_preference=pref) == \
+                tcp_client.multiget(ids[:5], read_preference=pref) == expect[:5]
+
+
+# --------------------------------------------------------- stats unification
+def test_stats_schema_identical_across_all_four_frontends(
+    cluster, corpus_dirs, titles
+):
+    tcp_client, _ = cluster
+    clients = {
+        "file": connect(f"file://{corpus_dirs['flat']}"),
+        "mut": connect(f"mut://{corpus_dirs['mut']}"),
+        "shard": connect(f"shard://{corpus_dirs['sharded']}"),
+        "tcp": tcp_client,
+    }
+    try:
+        key_sets = {}
+        for name, client in clients.items():
+            client.multiget([0, 1, 2])
+            client.scan(0, 4)
+            snap = client.stats()
+            key_sets[name] = frozenset(snap)
+            # the unified schema every frontend must speak
+            assert {"latency_summary", "throughput_mib_s", "wakeups",
+                    "ops", "n_strings", "backend"} <= key_sets[name]
+            assert snap["n_strings"] == len(titles)
+            assert snap["ops"]["multiget"] >= 1
+            assert snap["latency_summary"]["count"] >= 2
+            assert snap["throughput_mib_s"] > 0
+        assert len(set(key_sets.values())) == 1, key_sets
+        # backends with a micro-batching service actually count wakeups
+        assert clients["file"].stats()["wakeups"] >= 1
+        assert clients["tcp"].stats()["wakeups"] >= 1
+    finally:
+        for name in ("file", "mut", "shard"):
+            clients[name].close()
+
+
+# ------------------------------------------------------- async path & errors
+def test_async_pipelining_matches_sync(corpus_dirs, titles):
+    with connect(f"file://{corpus_dirs['flat']}") as client:
+        batches = [list(range(k, k + 50)) for k in range(0, 500, 50)]
+        futs = [client.multiget_async(b) for b in batches]
+        got = [v for f in futs for v in f.result(30)]
+        assert got == [titles[i] for i in range(500)]
+        svc = client.stats()["backend"]["service"]
+        assert svc["requests"] == 500
+
+
+def test_async_failure_semantics(corpus_dirs, titles):
+    with connect(f"file://{corpus_dirs['flat']}") as client:
+        with pytest.raises(IndexError):
+            client.multiget_async([0, len(titles)]).result(30)
+        with pytest.raises(IndexError):
+            client.get_async(-1).result(30)
+        # a read-only backend refuses writes through the same future path
+        with pytest.raises(TypeError, match="read-only"):
+            client.extend_async([b"x"]).result(30)
+        with pytest.raises(TypeError, match="read-only"):
+            client.append(b"x")
+        with pytest.raises(TypeError, match="read-only"):
+            client.compact()
+    with pytest.raises(RuntimeError, match="closed"):
+        client.multiget([0])
+
+
+def test_cancelled_future_skipped_and_worker_survives(corpus_dirs, titles):
+    with connect(f"file://{corpus_dirs['flat']}") as client:
+        store = client.backend
+        orig = store.multiget
+        started = threading.Event()
+
+        def slow_multiget(ids):
+            started.set()
+            time.sleep(0.4)
+            return orig(ids)
+
+        store.multiget = slow_multiget
+        try:
+            first = client.multiget_async([0, 1])
+            assert started.wait(5), "worker never picked up the first batch"
+            victim = client.multiget_async([2, 3])  # queued behind the decode
+            assert victim.cancel(), "pending future should be cancellable"
+            assert victim.cancelled()
+            assert first.result(10) == [titles[0], titles[1]]
+        finally:
+            store.multiget = orig
+        # the worker skipped the cancelled item instead of crashing on it
+        assert client.multiget([2, 3]) == [titles[2], titles[3]]
+
+
+def test_timed_out_future_raises_and_service_completes(corpus_dirs, titles):
+    with connect(f"file://{corpus_dirs['flat']}") as client:
+        store = client.backend
+        orig = store.multiget
+        store.multiget = lambda ids: (time.sleep(0.3), orig(ids))[1]
+        try:
+            fut = client.multiget_async([5])
+            with pytest.raises(FuturesTimeout):
+                fut.result(0.05)
+            with pytest.raises(FuturesTimeout):
+                client.multiget([6], timeout=0.05)
+            # the work itself was not lost — the future still resolves
+            assert fut.result(10) == [titles[5]]
+        finally:
+            store.multiget = orig
+
+
+def test_scan_iter_propagates_index_error(cluster, corpus_dirs, titles):
+    tcp_client, _ = cluster
+    with connect(f"file://{corpus_dirs['flat']}") as file_client:
+        for client in (file_client, tcp_client):
+            with pytest.raises(IndexError):
+                list(client.scan_iter(0, len(titles) + 5, chunk=10**9))
+            with pytest.raises(IndexError):
+                client.scan_iter(5, 4)
+            assert list(client.scan_iter(0, 0)) == []
+
+
+def test_bad_read_preference_rejected_on_every_backend(
+    cluster, corpus_dirs, titles
+):
+    """A typo'd read_preference fails identically whether or not the
+    backend can act on it — the frozen-surface contract."""
+    tcp_client, _ = cluster
+    with connect(f"file://{corpus_dirs['flat']}") as file_client:
+        for client in (file_client, tcp_client):
+            with pytest.raises(ValueError, match="read_preference"):
+                client.multiget([0], read_preference="replcia")
+            with pytest.raises(ValueError, match="read_preference"):
+                client.get_async(0, read_preference="nearest")
+            with pytest.raises(ValueError, match="read_preference"):
+                client.scan(0, 2, read_preference="replicas")
+            with pytest.raises(ValueError, match="read_preference"):
+                client.scan_iter(0, 2, read_preference="replicas")
+    with pytest.raises(ValueError, match="read_preference"):
+        connect(f"file://{corpus_dirs['flat']}", read_preference="oops")
+
+
+def test_tcp_connect_failure_closes_opened_sockets(cluster):
+    """A bad constructor kwarg (or a dead shard) during tcp connect must
+    close the shard connections it already opened, not leak them."""
+    tcp_client, servers = cluster
+    url = format_tcp_url([s.address for s in servers])
+    import repro.net.router as router_mod
+
+    closed = []
+    orig_close = router_mod.RemoteShardClient.close
+
+    def tracking_close(self):
+        closed.append(self.address)
+        orig_close(self)
+
+    router_mod.RemoteShardClient.close = tracking_close
+    try:
+        with pytest.raises(TypeError):
+            connect(url, scan_chnk=8)  # typo reaches the ctor post-RPC
+    finally:
+        router_mod.RemoteShardClient.close = orig_close
+    assert len(closed) == len(servers)
+
+
+def test_router_per_call_timeout_routes_through_future(cluster, titles):
+    """Sync router calls go direct; an explicit timeout= opts into the
+    future path and still answers correctly (and can actually time out)."""
+    tcp_client, _ = cluster
+    assert tcp_client.multiget([1, 2], timeout=30.0) == titles[1:3]
+    assert tcp_client.get(1, timeout=30.0) == titles[1]
+    store = tcp_client.backend
+    orig = store.multiget
+
+    def slow_multiget(ids, **kw):
+        time.sleep(0.3)
+        return orig(ids, **kw)
+
+    store.multiget = slow_multiget
+    try:
+        with pytest.raises(FuturesTimeout):
+            tcp_client.multiget([1], timeout=0.02)
+    finally:
+        store.multiget = orig
+
+
+def test_replica_preference_falls_back_to_primary(cluster, titles):
+    """read_preference='replica' with no replica registered serves from the
+    primary (asserted via the servers' op counters)."""
+    tcp_client, servers = cluster
+    before = [s.op_counts.get("multiget", 0) for s in servers]
+    ids = [1, len(titles) // 2, len(titles) - 1]  # touches every shard
+    assert tcp_client.multiget(ids, read_preference="replica") == \
+        [titles[i] for i in ids]
+    after = [s.op_counts.get("multiget", 0) for s in servers]
+    assert all(a > b for a, b in zip(after, before))
+
+
+# ----------------------------------- replica routing + compaction hand-off
+def test_replica_reads_via_preference_and_during_live_compact(titles, tmp_path):
+    """Acceptance: read_preference='replica' reads are served by the replica
+    (server-side op counters) — including while a live compact() is in
+    flight — and ids beyond the replica's generation fall back to the
+    primary (the staleness guard)."""
+    store = CompressedStringStore.build(
+        titles[:1500], sample_bytes=SAMPLE, strings_per_segment=256
+    )
+    d = str(tmp_path / "shards")
+    save_sharded(store, d, 2)
+    tail_dir = os.path.join(d, "shard-0001")
+    servers = [
+        ShardServer.from_dir(os.path.join(d, f"shard-{k:04d}")).start()
+        for k in range(2)
+    ]
+    client = connect(format_tcp_url([s.address for s in servers]), dir_path=d)
+    replica = None
+    try:
+        pre_ids = client.extend([b"pre-%d" % i for i in range(20)])
+        client.save()  # replica opens the saved (current) generation
+        replica = ShardServer.from_dir(tail_dir, read_only=True).start()
+        client.register_replica(1, replica.address)
+
+        # --- outside any compaction window: replica takes preference reads
+        before = replica.op_counts.get("multiget", 0)
+        assert client.multiget(pre_ids[:4], read_preference="replica") == \
+            [b"pre-%d" % i for i in range(4)]
+        assert replica.op_counts.get("multiget", 0) > before
+        # "any" round-robins primary + replica: over several reads both serve
+        p_before = servers[1].op_counts.get("multiget", 0)
+        r_before = replica.op_counts.get("multiget", 0)
+        for _ in range(4):
+            client.get(pre_ids[0], read_preference="any")
+        assert servers[1].op_counts.get("multiget", 0) > p_before
+        assert replica.op_counts.get("multiget", 0) > r_before
+        # staleness guard: an id appended AFTER the replica opened must be
+        # answered by the primary even under read_preference="replica"
+        fresh = client.append(b"past-the-replica-generation")
+        r_before = replica.op_counts.get("multiget", 0)
+        assert client.get(fresh, read_preference="replica") == \
+            b"past-the-replica-generation"
+        assert replica.op_counts.get("multiget", 0) == r_before
+
+        # --- while a live compact() is in flight, replica serves the reads
+        primary_store = servers[1].store
+        orig_compact = primary_store.compact
+
+        def slow_compact(**kw):
+            time.sleep(0.6)
+            return orig_compact(**kw)
+
+        primary_store.compact = slow_compact
+        done = {}
+        compacter = threading.Thread(
+            target=lambda: done.update(report=client.compact(shard=1))
+        )
+        compacter.start()
+        deadline = time.time() + 5
+        while not client.backend._draining.get(1) and time.time() < deadline:
+            time.sleep(0.01)
+        assert client.backend._draining.get(1), "compact never drained"
+        r_before = replica.op_counts.get("multiget", 0)
+        t0 = time.time()
+        assert client.multiget(pre_ids, read_preference="replica") == \
+            [b"pre-%d" % i for i in range(20)]
+        assert client.get(pre_ids[3]) == b"pre-3"  # default pref drains too
+        assert time.time() - t0 < 0.5, "reads waited on the rewrite"
+        assert replica.op_counts.get("multiget", 0) >= r_before + 2
+        mid = client.append(b"parked-during-compact")
+        compacter.join(timeout=30)
+        assert done["report"][0]["n_strings"] > 0
+        assert client.get(mid) == b"parked-during-compact"
+    finally:
+        client.close()
+        for s in servers:
+            s.close()
+        if replica is not None:
+            replica.close()
+
+
+# ----------------------------------------------------- kill/restart reconnect
+def _spawn_server(args):
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.net", *args],
+        stdout=subprocess.PIPE,
+        stderr=subprocess.PIPE,
+        text=True,
+        env=CHILD_ENV,
+    )
+    line = proc.stdout.readline()
+    m = re.search(r"SHARD_SERVER_READY port=(\d+)", line)
+    if not m:
+        proc.terminate()
+        raise AssertionError(
+            f"server never became ready: {line!r}\n{proc.stderr.read()}"
+        )
+    return proc, ("127.0.0.1", int(m.group(1)))
+
+
+def test_client_reconnects_across_server_restart(corpus_dirs, titles):
+    proc, addr = _spawn_server([corpus_dirs["mut"]])
+    client = None
+    try:
+        client = connect(f"tcp://{addr[0]}:{addr[1]}")
+        assert client.get(1) == titles[1]
+        proc.terminate()
+        proc.wait()
+        proc, _ = _spawn_server([corpus_dirs["mut"], "--port", str(addr[1])])
+        # the session re-finds the restarted process transparently
+        assert client.multiget([1, 5]) == [titles[1], titles[5]]
+        assert client.backend.clients[0].reconnects >= 1
+    finally:
+        if client is not None:
+            client.close()
+        proc.terminate()
+
+
+# ------------------------------------------------- adaptive max_wait_s knob
+def test_adaptive_controller_shrinks_window_when_p99_overshoots(titles):
+    store = CompressedStringStore.build(titles[:256], sample_bytes=SAMPLE)
+    with StoreService(store, max_wait_s=0.004, target_p99_s=1e-9,
+                      adapt_window=8) as svc:
+        for i in range(24):
+            assert svc.get(i % 256) == titles[i % 256]
+        assert svc.max_wait_s < 0.004
+        assert svc.wait_adjustments >= 1
+        assert svc.stats()["target_p99_s"] == 1e-9
+
+
+def test_adaptive_controller_grows_window_under_headroom(titles):
+    store = CompressedStringStore.build(titles[:256], sample_bytes=SAMPLE)
+    with StoreService(store, max_wait_s=0.0, target_p99_s=10.0,
+                      adapt_window=8, max_wait_cap_s=0.002) as svc:
+        for i in range(64):
+            svc.get(i % 256)
+        assert 0.0 < svc.max_wait_s <= 0.002
+        assert svc.wait_adjustments >= 1
+
+
+def test_target_p99_surfaced_through_connect(corpus_dirs, titles):
+    with connect(f"file://{corpus_dirs['flat']}", target_p99_ms=0.0001,
+                 max_wait_s=0.004, adapt_window=8) as client:
+        for i in range(24):
+            client.get(i)
+        snap = client.stats()
+        assert snap["target_p99_s"] == pytest.approx(1e-7)
+        assert snap["max_wait_s"] < 0.004
+        assert snap["backend"]["service"]["wait_adjustments"] >= 1
+
+
+# ------------------------------------------------------------------ wrapping
+def test_wrap_existing_backends(titles):
+    store = CompressedStringStore.build(titles[:512], sample_bytes=SAMPLE)
+    with wrap(store) as client:
+        assert isinstance(client, StoreClient)
+        assert client.scheme == "file"
+        assert client.multiget([0, 5]) == [titles[0], titles[5]]
+    with pytest.raises(TypeError, match="cannot wrap"):
+        wrap(object())
+
+
+def test_mut_client_appends_and_saves(corpus_dirs, titles, tmp_path):
+    d = str(tmp_path / "mut2")
+    MutableStringStore.open(corpus_dirs["flat"]).save(d)
+    with connect(f"mut://{d}") as client:
+        n0 = len(client)
+        new_id = client.append(b"v3-append")
+        ids = client.extend_async([b"v3-a", b"v3-b"]).result(30)
+        assert [new_id, *ids] == [n0, n0 + 1, n0 + 2]
+        assert client.multiget([new_id, *ids]) == [b"v3-append", b"v3-a", b"v3-b"]
+        client.save()
+    with connect(f"file://{d}") as reopened:  # durable, readable read-only
+        assert reopened.get(new_id) == b"v3-append"
+        assert len(reopened) == n0 + 3

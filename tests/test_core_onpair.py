@@ -11,9 +11,9 @@ try:
 except ImportError:  # optional dev dep: property tests skip, the rest run
     from _hypothesis_fallback import given, settings, st
 
-from repro.core import (ALL_COMPRESSORS, BPECompressor, FSSTCompressor,
-                        OnPairConfig, PackedDictionary, auto_threshold,
-                        make_onpair, make_onpair16, train_dictionary)
+from repro.core import (BPECompressor, FSSTCompressor, OnPairConfig,
+                        PackedDictionary, auto_threshold, make_onpair,
+                        make_onpair16, registry, train_dictionary)
 from repro.core.lpm import DynamicLPM
 from repro.core.packing import (is_prefix_packed, pack_u64,
                                 shared_prefix_size, unpack_u64)
@@ -125,7 +125,7 @@ def test_roundtrip_all_compressors(titles, name):
     if name == "zstd-block":
         pytest.importorskip("zstandard")
     strings = titles[:4000]
-    c = ALL_COMPRESSORS[name]()
+    c = registry.create(name)
     c.train(strings, sum(map(len, strings)))
     corpus = c.compress(strings)
     assert c.decompress_all(corpus) == b"".join(strings)
@@ -189,8 +189,30 @@ def test_paper_claim_ratio_ordering(titles):
     strings = titles
     rs = {}
     for name in ("onpair", "onpair16", "fsst"):
-        c = ALL_COMPRESSORS[name]()
+        c = registry.create(name)
         c.train(strings, sum(map(len, strings)))
         rs[name] = c.compress(strings[:3000]).ratio
     assert rs["onpair"] >= rs["onpair16"] * 0.98
     assert rs["onpair16"] > rs["fsst"] * 1.1
+
+
+# ------------------------------------------------------- deprecated shim
+def test_back_compat_shim_warns_and_still_works():
+    """ALL_COMPRESSORS / StringCompressor survive as a deprecated facade
+    over the registry: accessing them warns, using them still works (the
+    removal horizon is documented in README 'Deprecations')."""
+    import repro.core as core
+
+    with pytest.warns(DeprecationWarning, match="registry"):
+        all_compressors = core.ALL_COMPRESSORS
+    assert set(all_compressors) == {
+        "raw", "zlib-block", "zstd-block", "lz-block", "bpe", "fsst",
+        "onpair", "onpair16"}
+    c = all_compressors["onpair16"]()
+    c.train([b"shim", b"still", b"works"])
+    assert c.access(c.compress([b"shim"]), 0) == b"shim"
+
+    with pytest.warns(DeprecationWarning, match="repro.core.api"):
+        from repro.core import StringCompressor
+    from repro.core.api import StringCompressor as canonical
+    assert StringCompressor is canonical  # the shim aliases, not forks

@@ -399,7 +399,9 @@ def test_replica_failover_during_live_compact(titles, tmp_path):
         assert dist.get(pre_ids[3]) == b"pre-compact-3"
         assert dist.multiget(pre_ids) == [b"pre-compact-%d" % i for i in range(20)]
         assert time.time() - t0 < 0.5
-        assert dist._replicas[1].n_strings >= pre_ids[-1] - dist.bounds[1][0]
+        replica_client, replica_n = dist._replicas[1][0]
+        assert replica_client.n_strings >= pre_ids[-1] - dist.bounds[1][0]
+        assert replica_n == replica_client.n_strings
 
         # appends park in the retry queue and are acknowledged post-swap
         mid_id = dist.append(b"appended-during-compact")
