@@ -18,10 +18,12 @@ halved for hardware headroom; the 5x band absorbs CI-runner noise on top).
 from __future__ import annotations
 
 import argparse
+import importlib.util
 import json
 import os
 import subprocess
 import sys
+from datetime import datetime, timezone
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BASELINE = os.path.join(REPO, "results", "bench", "baseline.json")
@@ -61,6 +63,14 @@ def _commit() -> str:
         return "unknown"
 
 
+def _backend() -> str:
+    """Which decode backend this run exercises: ``pallas`` when jax is
+    importable and not opted out via REPRO_NO_JAX, else ``numpy``."""
+    if os.environ.get("REPRO_NO_JAX"):
+        return "numpy"
+    return "pallas" if importlib.util.find_spec("jax") else "numpy"
+
+
 def run_benchmarks(only: str, quick: bool = True) -> list[str]:
     """Invoke benchmarks/run.py in a child (a crash fails the job) and
     return its CSV lines."""
@@ -80,8 +90,13 @@ def run_benchmarks(only: str, quick: bool = True) -> list[str]:
     return [ln for ln in proc.stdout.splitlines() if "," in ln]
 
 
-def rows_from_csv(lines: list[str], commit: str) -> list[dict]:
-    """CSV ``name,us_per_call,derived`` -> BENCH schema rows."""
+def rows_from_csv(lines: list[str], commit: str, backend: str = "numpy",
+                  timestamp: str | None = None) -> list[dict]:
+    """CSV ``name,us_per_call,derived`` -> BENCH schema rows, each stamped
+    with the decode ``backend`` and an ISO-8601 UTC ``timestamp`` so runs
+    from different hosts/configs stay attributable after aggregation."""
+    if timestamp is None:
+        timestamp = datetime.now(timezone.utc).isoformat(timespec="seconds")
     rows: list[dict] = []
     for line in lines:
         name, us, derived = line.split(",", 2)
@@ -95,6 +110,8 @@ def rows_from_csv(lines: list[str], commit: str) -> list[dict]:
                 "value": float(us),
                 "unit": "us",
                 "commit": commit,
+                "backend": backend,
+                "timestamp": timestamp,
             }
         )
         for pair in derived.split(";"):
@@ -112,6 +129,8 @@ def rows_from_csv(lines: list[str], commit: str) -> list[dict]:
                     "value": value,
                     "unit": RATE_KEYS[key],
                     "commit": commit,
+                    "backend": backend,
+                    "timestamp": timestamp,
                 }
             )
     return rows
@@ -172,7 +191,11 @@ def main() -> None:
     )
     args = ap.parse_args()
 
-    rows = rows_from_csv(run_benchmarks(args.only, quick=not args.full_size), _commit())
+    rows = rows_from_csv(
+        run_benchmarks(args.only, quick=not args.full_size),
+        _commit(),
+        backend=_backend(),
+    )
     with open(args.out, "w") as f:
         json.dump(rows, f, indent=1)
     print(f"wrote {len(rows)} rows to {args.out}")

@@ -42,7 +42,14 @@ import time
 from concurrent.futures import Future, ThreadPoolExecutor
 
 from repro.client.url import StoreURL, parse_url
-from repro.core.metrics import LatencyReservoir, throughput_mib_s
+from repro.core.metrics import throughput_mib_s
+from repro.obs import (
+    REGISTRY,
+    TRACER,
+    Histogram,
+    merge_hist_states,
+    summarize_hist_state,
+)
 from repro.distributed.shard_store import (
     ShardedStringStore,
     ShardRouter,
@@ -76,7 +83,10 @@ class StoreClient:
                                              thread_name_prefix="store-client"))
         self._closed = False
         self._lock = threading.Lock()
-        self._lat = LatencyReservoir()
+        # per-client histogram (stats() stays session-scoped), registered so
+        # /metrics in a client process exports the same series name
+        self._lat = REGISTRY.register(
+            Histogram("repro_client_request_latency_us"))
         self._ops: dict[str, int] = {}
         self._bytes_moved = 0
         self._busy_s = 0.0
@@ -93,28 +103,55 @@ class StoreClient:
 
     def _record(self, op: str, t0: float, nbytes: int) -> None:
         dt = time.perf_counter() - t0
+        self._lat.record(dt * 1e6)
         with self._lock:
             self._ops[op] = self._ops.get(op, 0) + 1
-            self._lat.record(dt)
             self._bytes_moved += nbytes
             self._busy_s += dt
 
-    def _tracked(self, fut: Future, op: str, t0: float, nbytes_of) -> Future:
-        """Attach session accounting to a backend/service future."""
+    def _tracked(self, fut: Future, op: str, t0: float, nbytes_of,
+                 ctx=None, parent_id: int = 0) -> Future:
+        """Attach session accounting (and the request's root span, when one
+        was minted at submit time) to a backend/service future."""
         def _done(f: Future) -> None:
             nbytes = 0
             if not f.cancelled() and f.exception() is None:
                 nbytes = nbytes_of(f.result())
+            if ctx is not None:
+                TRACER.record(f"client.{op}", ctx, parent_id, t0,
+                              time.perf_counter() - t0)
             self._record(op, t0, nbytes)
         fut.add_done_callback(_done)
         return fut
+
+    def _trace_submit(self, submit):
+        """Mint this request's root span context, activate it around the
+        backend submit (queue items / executor jobs capture it there), and
+        return ``(future, ctx, parent_id)`` for :meth:`_tracked`."""
+        ctx, parent_id = TRACER.new_context()
+        prev = TRACER.activate(ctx)
+        try:
+            return submit(), ctx, parent_id
+        finally:
+            TRACER.restore(prev)
 
     @staticmethod
     def _len_sum(values) -> int:
         return sum(len(v) for v in values)
 
     def _submit(self, fn, *args, **kw) -> Future:
-        """Run ``fn`` on the client executor (router backends only)."""
+        """Run ``fn`` on the client executor (router backends only); the
+        submitter's trace context rides along onto the executor thread."""
+        ctx = TRACER.current()
+        if ctx is not None:
+            inner = fn
+
+            def fn(*a, **k):  # noqa: F811 — traced wrapper shadows on purpose
+                prev = TRACER.activate(ctx)
+                try:
+                    return inner(*a, **k)
+                finally:
+                    TRACER.restore(prev)
         try:
             return self._executor.submit(fn, *args, **kw)
         except RuntimeError:  # executor shut down under a racing close()
@@ -127,7 +164,8 @@ class StoreClient:
         remote transports stay bounded regardless by the socket timeout."""
         self._check_open()
         t0 = time.perf_counter()
-        out = call()
+        with TRACER.span(f"client.{op}", root=True):
+            out = call()
         self._record(op, t0, nbytes_of(out))
         return out
 
@@ -147,11 +185,13 @@ class StoreClient:
         pref = self._pref(read_preference)
         t0 = time.perf_counter()
         if self._service is not None:
-            fut = self._service.submit(int(i))
+            fut, ctx, pid = self._trace_submit(
+                lambda: self._service.submit(int(i)))
         else:
-            fut = self._submit(self.backend.get, int(i),
-                               read_preference=pref)
-        return self._tracked(fut, "get", t0, len)
+            fut, ctx, pid = self._trace_submit(
+                lambda: self._submit(self.backend.get, int(i),
+                                     read_preference=pref))
+        return self._tracked(fut, "get", t0, len, ctx, pid)
 
     def multiget_async(self, ids, *,
                        read_preference: str | None = None
@@ -163,11 +203,13 @@ class StoreClient:
         t0 = time.perf_counter()
         ids = [int(i) for i in ids]
         if self._service is not None:
-            fut = self._service.submit_multiget(ids)
+            fut, ctx, pid = self._trace_submit(
+                lambda: self._service.submit_multiget(ids))
         else:
-            fut = self._submit(self.backend.multiget, ids,
-                               read_preference=pref)
-        return self._tracked(fut, "multiget", t0, self._len_sum)
+            fut, ctx, pid = self._trace_submit(
+                lambda: self._submit(self.backend.multiget, ids,
+                                     read_preference=pref))
+        return self._tracked(fut, "multiget", t0, self._len_sum, ctx, pid)
 
     def get(self, i: int, *, timeout: float | None = None,
             read_preference: str | None = None) -> bytes:
@@ -233,10 +275,12 @@ class StoreClient:
         self._check_open()
         t0 = time.perf_counter()
         if self._service is not None:
-            fut = self._service.submit_append(bytes(s))
+            fut, ctx, pid = self._trace_submit(
+                lambda: self._service.submit_append(bytes(s)))
         else:
-            fut = self._submit(self._router_append, bytes(s))
-        return self._tracked(fut, "append", t0, lambda _i: len(s))
+            fut, ctx, pid = self._trace_submit(
+                lambda: self._submit(self._router_append, bytes(s)))
+        return self._tracked(fut, "append", t0, lambda _i: len(s), ctx, pid)
 
     def extend_async(self, strings) -> "Future[list[int]]":
         """One batched append as a future; local stores fold concurrent
@@ -246,10 +290,12 @@ class StoreClient:
         strings = [bytes(s) for s in strings]
         nbytes = self._len_sum(strings)
         if self._service is not None:
-            fut = self._service.submit_extend(strings)
+            fut, ctx, pid = self._trace_submit(
+                lambda: self._service.submit_extend(strings))
         else:
-            fut = self._submit(self._router_extend, strings)
-        return self._tracked(fut, "extend", t0, lambda _ids: nbytes)
+            fut, ctx, pid = self._trace_submit(
+                lambda: self._submit(self._router_extend, strings))
+        return self._tracked(fut, "extend", t0, lambda _ids: nbytes, ctx, pid)
 
     def _router_append(self, s: bytes) -> int:
         return self.backend.append(s)
@@ -356,8 +402,32 @@ class StoreClient:
                 svc = shard_snap.get("service")
                 if svc:  # tcp:// shard servers export their service counters
                     wakeups += svc.get("wakeups", 0)
+        # server-side op counts (tcp:// shard servers report them; other
+        # backends have no server so the totals are empty) + cross-shard
+        # store-latency aggregation: per-shard histogram states merge
+        # losslessly, so the merged p50/p99 equal the pooled-population
+        # percentiles no single shard could compute
+        op_totals: dict[str, int] = {}
+        per_shard_ops: list[dict] = []
+        hist_states: list[dict] = []
+        shards = backend_snap.get("shards")
+        for k, shard_snap in enumerate(shards if shards is not None else ()):
+            ops_k = shard_snap.get("ops")
+            if ops_k:
+                per_shard_ops.append({"shard": k, "ops": dict(ops_k)})
+                for op, count in ops_k.items():
+                    op_totals[op] = op_totals.get(op, 0) + int(count)
+            store_snap = shard_snap.get("store", shard_snap)
+            state = store_snap.get("multiget_latency_hist")
+            if state:
+                hist_states.append(state)
+        if shards is None:
+            state = backend_snap.get("multiget_latency_hist")
+            if state:
+                hist_states.append(state)
+        merged = merge_hist_states(hist_states)
+        lat = self._lat.summary()
         with self._lock:
-            lat = self._lat.summary()
             ops = dict(self._ops)
             moved, busy = self._bytes_moved, self._busy_s
         return {
@@ -366,6 +436,9 @@ class StoreClient:
             "n_strings": self.n_strings,
             "read_preference": self.read_preference,
             "ops": ops,
+            "server_ops": {"total": op_totals, "per_shard": per_shard_ops},
+            "store_latency": (summarize_hist_state(merged)
+                              if merged is not None else None),
             "latency_summary": lat,
             "throughput_mib_s": round(throughput_mib_s(moved, busy), 2)
             if busy else 0.0,

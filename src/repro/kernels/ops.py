@@ -15,6 +15,14 @@ from repro.core.packed import PackedDictionary
 from repro.kernels import onpair_decode, onpair_encode
 from repro.kernels.ref import (DeviceDict, decode_batch_ref_jit,
                                encode_batch_ref_jit)
+from repro.obs import REGISTRY, TRACER, Counter
+
+#: device decode invocations by kernel path — pallas vs the jitted reference
+_DECODE_BATCHES = {
+    path: REGISTRY.register(Counter("repro_kernel_decode_batches_total",
+                                    labels={"path": path}))
+    for path in ("pallas", "ref")
+}
 
 
 def _pad_to(x: int, multiple: int) -> int:
@@ -127,14 +135,18 @@ class OnPairDevice:
         """Batched random-access decode: tokens int32[B,T] -> list[bytes]."""
         tokens = np.asarray(tokens, dtype=np.int32)
         n_tokens = np.asarray(n_tokens, dtype=np.int32)
-        if use_pallas:
-            out, olen = onpair_decode.decode_compact(
-                jnp.asarray(tokens), jnp.asarray(n_tokens),
-                self.dd.mat16, self.dd.lens, max_out)
-        else:
-            out, olen = decode_batch_ref_jit(
-                jnp.asarray(tokens), jnp.asarray(n_tokens),
-                self.dd.mat16, self.dd.lens, max_out)
+        path = "pallas" if use_pallas else "ref"
+        _DECODE_BATCHES[path].inc()
+        with TRACER.span("kernel.decode_batch", path=path,
+                         shape=list(tokens.shape)):
+            if use_pallas:
+                out, olen = onpair_decode.decode_compact(
+                    jnp.asarray(tokens), jnp.asarray(n_tokens),
+                    self.dd.mat16, self.dd.lens, max_out)
+            else:
+                out, olen = decode_batch_ref_jit(
+                    jnp.asarray(tokens), jnp.asarray(n_tokens),
+                    self.dd.mat16, self.dd.lens, max_out)
         out = np.asarray(out)
         olen = np.asarray(olen)
         return [out[i, : olen[i]].astype(np.uint8).tobytes()

@@ -37,6 +37,10 @@ def main() -> None:
                     help="--shard-server bind port (0 = kernel-assigned)")
     ap.add_argument("--read-only", action="store_true",
                     help="--shard-server: serve as a read-only replica")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="also serve Prometheus /metrics + the /traces "
+                         "slow-request dump on this port (0 = "
+                         "kernel-assigned); applies to both roles")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--prompts", nargs="+",
                     default=["the quick brown", "in memory database"])
@@ -64,8 +68,15 @@ def main() -> None:
         # RPC-server role: stdlib + numpy only — never pull in jax/the LM
         from repro.net.shard_server import run
         run(args.shard_server, host=args.host, port=args.port,
-            read_only=args.read_only)
+            read_only=args.read_only, metrics_port=args.metrics_port)
         return
+
+    if args.metrics_port is not None:
+        # LM path: expose the store/client/kernel metrics this process
+        # records while it serves (scrape http://host:port/metrics)
+        from repro.obs import start_metrics_server
+        metrics = start_metrics_server(port=args.metrics_port)
+        print(f"metrics: http://127.0.0.1:{metrics.port}/metrics", flush=True)
 
     import jax
     import jax.numpy as jnp

@@ -19,6 +19,17 @@ Frames above ``max_frame`` are refused *before* the payload is read
 (:class:`FrameTooLargeError` — a malformed or hostile peer cannot make the
 receiver allocate unbounded memory), and a socket that dies mid-frame
 surfaces :class:`TruncatedFrameError` rather than a silent short read.
+
+**Trace propagation (optional, version 2).** A frame whose ``version`` byte
+is :data:`TRACED_VERSION` prefixes its payload with a fixed 24-byte trace
+context — 16 hex chars of trace id + a ``u64`` parent span id — so a
+request's trace follows it across the socket (``repro.obs``). The header
+struct is unchanged and ``length`` covers the prefix, so any receiver that
+understands v2 parses both versions; v1-only peers stay tolerated by never
+*sending* them v2: a client probes capability once per server with an
+:data:`OP_PING` carrying :data:`CAPS_PROBE` (an old server echoes the probe
+verbatim — its ping is an echo — while a new server answers a capability
+JSON), and only attaches trace headers when the probe came back positive.
 """
 
 from __future__ import annotations
@@ -29,10 +40,24 @@ import struct
 
 import numpy as np
 
+from repro.obs.trace import TraceContext
+
 MAGIC = b"RS"
 VERSION = 1
+#: frame version whose payload starts with a 24-byte trace context
+TRACED_VERSION = 2
 _HEADER = struct.Struct("<2sBBI")
 HEADER_BYTES = _HEADER.size
+_TRACE_CTX = struct.Struct("<16sQ")
+#: bytes of trace context prefixing a TRACED_VERSION payload
+TRACE_CTX_BYTES = _TRACE_CTX.size
+
+#: OP_PING payload a client sends to discover server capabilities: an old
+#: server echoes it back byte-for-byte, a trace-aware server replies with a
+#: capability JSON — the difference IS the negotiation.
+CAPS_PROBE = b"\x00REPRO-CAPS\x00"
+#: capabilities a trace-aware server answers the probe with
+SERVER_CAPS = {"trace": True, "trace_version": TRACED_VERSION}
 
 #: refuse frames above this size unless the caller raises the limit
 DEFAULT_MAX_FRAME = 64 << 20
@@ -47,6 +72,7 @@ OP_EXTEND = 0x06
 OP_STATS = 0x07
 OP_COMPACT = 0x08
 OP_SAVE = 0x09
+OP_TRACE_DUMP = 0x0A
 
 # response statuses
 ST_OK = 0x40
@@ -62,6 +88,7 @@ OP_NAMES = {
     OP_STATS: "stats",
     OP_COMPACT: "compact",
     OP_SAVE: "save",
+    OP_TRACE_DUMP: "trace_dump",
 }
 
 
@@ -82,13 +109,33 @@ class RemoteError(RuntimeError):
 
 
 # --------------------------------------------------------------------- frames
-def encode_frame(kind: int, payload: bytes = b"") -> bytes:
-    """One wire frame: header + payload."""
-    return _HEADER.pack(MAGIC, VERSION, kind, len(payload)) + payload
+def pack_trace(ctx: TraceContext) -> bytes:
+    """Trace context -> the fixed 24-byte wire prefix."""
+    return _TRACE_CTX.pack(ctx.trace_id.encode("ascii")[:16].ljust(16, b"0"),
+                           ctx.span_id & (2**64 - 1))
 
 
-def decode_header(header: bytes, max_frame: int = DEFAULT_MAX_FRAME) -> tuple[int, int]:
-    """Validate one header; returns ``(kind, payload_length)``."""
+def unpack_trace(raw: bytes) -> TraceContext:
+    tid, span_id = _TRACE_CTX.unpack(raw)
+    return TraceContext(tid.decode("ascii", "replace"), int(span_id))
+
+
+def encode_frame(kind: int, payload: bytes = b"",
+                 trace: TraceContext | None = None) -> bytes:
+    """One wire frame: header + payload; with ``trace`` the frame is
+    version :data:`TRACED_VERSION` and the payload is prefixed by the
+    24-byte trace context (covered by ``length``)."""
+    if trace is None:
+        return _HEADER.pack(MAGIC, VERSION, kind, len(payload)) + payload
+    prefix = pack_trace(trace)
+    return (_HEADER.pack(MAGIC, TRACED_VERSION, kind,
+                         len(prefix) + len(payload)) + prefix + payload)
+
+
+def _decode_header_ex(
+    header: bytes, max_frame: int = DEFAULT_MAX_FRAME
+) -> tuple[int, int, int]:
+    """Validate one header; returns ``(kind, payload_length, version)``."""
     if len(header) < HEADER_BYTES:
         raise TruncatedFrameError(
             f"frame header truncated: {len(header)} of {HEADER_BYTES} bytes"
@@ -96,31 +143,58 @@ def decode_header(header: bytes, max_frame: int = DEFAULT_MAX_FRAME) -> tuple[in
     magic, version, kind, length = _HEADER.unpack(header[:HEADER_BYTES])
     if magic != MAGIC:
         raise ProtocolError(f"bad frame magic {magic!r}")
-    if version != VERSION:
+    if version not in (VERSION, TRACED_VERSION):
         raise ProtocolError(f"unsupported protocol version {version}")
+    if version == TRACED_VERSION and length < TRACE_CTX_BYTES:
+        raise ProtocolError(
+            f"traced frame of {length} bytes cannot hold its "
+            f"{TRACE_CTX_BYTES}-byte trace context"
+        )
     if length > max_frame:
         raise FrameTooLargeError(
             f"frame payload of {length} bytes exceeds max_frame={max_frame}"
         )
+    return kind, length, version
+
+
+def decode_header(header: bytes, max_frame: int = DEFAULT_MAX_FRAME) -> tuple[int, int]:
+    """Validate one header; returns ``(kind, payload_length)``."""
+    kind, length, _ = _decode_header_ex(header, max_frame=max_frame)
     return kind, length
 
 
-def decode_frame(
+def _split_trace(payload: bytes, version: int) -> tuple[bytes, TraceContext | None]:
+    if version != TRACED_VERSION:
+        return payload, None
+    return payload[TRACE_CTX_BYTES:], unpack_trace(payload[:TRACE_CTX_BYTES])
+
+
+def decode_frame_ex(
     buf: bytes, max_frame: int = DEFAULT_MAX_FRAME
-) -> tuple[int, bytes, int]:
+) -> tuple[int, bytes, TraceContext | None, int]:
     """Decode one frame from an in-memory buffer.
 
-    Returns ``(kind, payload, bytes_consumed)``; raises
-    :class:`TruncatedFrameError` when the buffer holds less than one full
-    frame (the streaming equivalent is a peer dying mid-send).
+    Returns ``(kind, payload, trace_context_or_None, bytes_consumed)``;
+    raises :class:`TruncatedFrameError` when the buffer holds less than one
+    full frame (the streaming equivalent is a peer dying mid-send).
     """
-    kind, length = decode_header(buf, max_frame=max_frame)
+    kind, length, version = _decode_header_ex(buf, max_frame=max_frame)
     end = HEADER_BYTES + length
     if len(buf) < end:
         raise TruncatedFrameError(
             f"frame payload truncated: {len(buf) - HEADER_BYTES} of {length} bytes"
         )
-    return kind, bytes(buf[HEADER_BYTES:end]), end
+    payload, trace = _split_trace(bytes(buf[HEADER_BYTES:end]), version)
+    return kind, payload, trace, end
+
+
+def decode_frame(
+    buf: bytes, max_frame: int = DEFAULT_MAX_FRAME
+) -> tuple[int, bytes, int]:
+    """Trace-agnostic :func:`decode_frame_ex`: ``(kind, payload, consumed)``
+    with any trace context already stripped from the payload."""
+    kind, payload, _, end = decode_frame_ex(buf, max_frame=max_frame)
+    return kind, payload, end
 
 
 def recv_exact(sock: socket.socket, n: int) -> bytes:
@@ -138,26 +212,39 @@ def recv_exact(sock: socket.socket, n: int) -> bytes:
     return b"".join(parts)
 
 
-def send_frame(sock: socket.socket, kind: int, payload: bytes = b"") -> None:
-    sock.sendall(encode_frame(kind, payload))
+def send_frame(sock: socket.socket, kind: int, payload: bytes = b"",
+               trace: TraceContext | None = None) -> None:
+    sock.sendall(encode_frame(kind, payload, trace=trace))
 
 
-def recv_frame(
+def recv_frame_ex(
     sock: socket.socket, max_frame: int = DEFAULT_MAX_FRAME
-) -> tuple[int, bytes] | None:
+) -> tuple[int, bytes, TraceContext | None] | None:
     """Read one frame; ``None`` on a clean EOF at a frame boundary.
 
-    EOF *inside* a frame raises :class:`TruncatedFrameError`; an oversized
-    declared length raises :class:`FrameTooLargeError` before any payload
-    byte is read.
+    Returns ``(kind, payload, trace_context_or_None)``. EOF *inside* a
+    frame raises :class:`TruncatedFrameError`; an oversized declared length
+    raises :class:`FrameTooLargeError` before any payload byte is read.
     """
     first = sock.recv(1)
     if not first:
         return None
     header = first + recv_exact(sock, HEADER_BYTES - 1)
-    kind, length = decode_header(header, max_frame=max_frame)
+    kind, length, version = _decode_header_ex(header, max_frame=max_frame)
     payload = recv_exact(sock, length) if length else b""
-    return kind, payload
+    payload, trace = _split_trace(payload, version)
+    return kind, payload, trace
+
+
+def recv_frame(
+    sock: socket.socket, max_frame: int = DEFAULT_MAX_FRAME
+) -> tuple[int, bytes] | None:
+    """Trace-agnostic :func:`recv_frame_ex`: ``(kind, payload)`` with any
+    trace context already stripped."""
+    frame = recv_frame_ex(sock, max_frame=max_frame)
+    if frame is None:
+        return None
+    return frame[0], frame[1]
 
 
 # ------------------------------------------------------------------- payloads

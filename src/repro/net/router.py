@@ -50,6 +50,7 @@ from repro.distributed.shard_store import (
     check_read_preference,
 )
 from repro.net import protocol as P
+from repro.obs import TRACER
 from repro.store.store import write_json_atomic
 
 
@@ -57,7 +58,8 @@ from repro.store.store import write_json_atomic
 #: else (append/extend/compact/save) may already have been applied by a
 #: slow-but-alive server, so blind resends would duplicate work
 _IDEMPOTENT_OPS = frozenset(
-    {P.OP_PING, P.OP_GET, P.OP_MULTIGET, P.OP_SCAN, P.OP_STATS}
+    {P.OP_PING, P.OP_GET, P.OP_MULTIGET, P.OP_SCAN, P.OP_STATS,
+     P.OP_TRACE_DUMP}
 )
 
 
@@ -91,6 +93,10 @@ class RemoteShardClient:
         self._pool: queue.LifoQueue = queue.LifoQueue()
         self._closed = False
         self.reconnects = 0
+        #: does the server speak trace-header (v2) frames? None = unknown —
+        #: resolved lazily by a CAPS_PROBE ping the first time a traced
+        #: request goes out, so old servers are never sent v2 frames
+        self._traced: bool | None = None
 
     # ------------------------------------------------------------ connections
     def _connect(self) -> socket.socket:
@@ -125,13 +131,49 @@ class RemoteShardClient:
         self.close()
 
     # ----------------------------------------------------------------- calls
+    def _probe_caps(self) -> bool:
+        """Resolve whether the server understands trace-header frames.
+
+        One :data:`~repro.net.protocol.CAPS_PROBE` ping: an old server's
+        ping handler echoes the probe verbatim, a trace-aware server answers
+        a capability JSON — the difference IS the negotiation, so no new op
+        (which an old server would reject) is needed.
+        """
+        resp = self._exchange(P.OP_PING, P.CAPS_PROBE, -1.0, None)
+        caps = None
+        if resp != P.CAPS_PROBE:
+            try:
+                caps = P.unpack_json(resp)
+            except Exception:
+                caps = None
+        self._traced = bool(caps) and bool(caps.get("trace"))
+        return self._traced
+
     def _call(self, op: int, payload: bytes = b"", timeout: float = -1.0) -> bytes:
-        """One request/response exchange; reconnect-and-retry on transport
-        failure (dead socket, truncated frame) for idempotent ops, never on
-        application errors (those arrive as ST_ERR and re-raise once).
+        """One request/response exchange, traced when a request trace is
+        active: the exchange gets an ``rpc.<op>`` span and — once a caps
+        probe has confirmed the server is trace-aware — the span's context
+        rides the frame header so server-side spans join the same trace."""
+        if TRACER.current() is None:
+            return self._exchange(op, payload, timeout, None)
+        if self._traced is None and op != P.OP_PING:
+            try:
+                self._probe_caps()
+            except Exception:
+                pass  # unreachable/hostile: this call goes untraced on wire
+        with TRACER.span(f"rpc.{P.OP_NAMES.get(op, hex(op))}",
+                         shard=f"{self.address[0]}:{self.address[1]}") as ctx:
+            return self._exchange(op, payload, timeout,
+                                  ctx if self._traced else None)
+
+    def _exchange(self, op: int, payload: bytes, timeout: float,
+                  trace) -> bytes:
+        """The raw exchange; reconnect-and-retry on transport failure (dead
+        socket, truncated frame) for idempotent ops, never on application
+        errors (those arrive as ST_ERR and re-raise once).
 
         ``timeout=None`` blocks for as long as the server works (compaction
-        can legitimately outlast the default request timeout); the default
+        can legitimately outlast the default request timeout); the
         ``-1.0`` sentinel means "use the client's configured timeout".
         """
         if self._closed:
@@ -153,7 +195,7 @@ class RemoteShardClient:
                 continue
             sock.settimeout(self.timeout if timeout == -1.0 else timeout)
             try:
-                P.send_frame(sock, op, payload)
+                P.send_frame(sock, op, payload, trace=trace)
                 frame = P.recv_frame(sock, max_frame=self.max_frame)
                 if frame is None:
                     raise P.TruncatedFrameError("server closed before answering")
@@ -204,8 +246,16 @@ class RemoteShardClient:
     def extend(self, strings: list[bytes]) -> list[int]:
         return P.unpack_ids(self._call(P.OP_EXTEND, P.pack_bytes_list(strings)))
 
-    def stats(self) -> dict:
-        return P.unpack_json(self._call(P.OP_STATS))
+    def stats(self, metrics: bool = False) -> dict:
+        """Server stats; ``metrics=True`` additionally asks for the server's
+        registry snapshot (mergeable histogram/counter states)."""
+        payload = P.pack_json({"metrics": True}) if metrics else b""
+        return P.unpack_json(self._call(P.OP_STATS, payload))
+
+    def trace_dump(self, n: int = 16) -> list[dict]:
+        """The server's slow-request log: its ``n`` slowest recent traces."""
+        return P.unpack_json(
+            self._call(P.OP_TRACE_DUMP, P.pack_json({"n": int(n)})))
 
     def compact(self, **kw) -> dict:
         # retrain + rewrite can far outlast the request timeout: block
@@ -370,11 +420,22 @@ class DistributedStringStore(ShardRouter):
         if len(jobs) == 1:  # don't pay executor latency for one shard
             k, local_ids = jobs[0]
             return [self._shard_multiget(k, local_ids, read_preference)]
+        # pool threads have no ambient trace — re-activate the caller's so
+        # each shard's rpc.multiget span lands in the same request trace
+        ctx = TRACER.current()
         futs = [
-            self._pool.submit(self._shard_multiget, k, lids, read_preference)
+            self._pool.submit(self._traced_shard_multiget, ctx, k, lids,
+                              read_preference)
             for k, lids in jobs
         ]
         return [f.result() for f in futs]
+
+    def _traced_shard_multiget(self, ctx, k, local_ids, read_preference):
+        prev = TRACER.activate(ctx)
+        try:
+            return self._shard_multiget(k, local_ids, read_preference)
+        finally:
+            TRACER.restore(prev)
 
     def _tail_extend(self, strings: list[bytes]) -> tuple[list[int], int]:
         local_ids = self.clients[-1].extend(strings)

@@ -29,7 +29,6 @@ on the numpy decode path (fast startup; what a CPU-only serving host runs).
 from __future__ import annotations
 
 import argparse
-import collections
 import json
 import os
 import re
@@ -38,6 +37,7 @@ import socketserver
 import threading
 
 from repro.net import protocol as P
+from repro.obs import REGISTRY, TRACER, Counter, start_metrics_server
 from repro.store.mutable import MutableStringStore
 from repro.store.service import StoreService
 from repro.store.store import CompressedStringStore
@@ -84,7 +84,7 @@ class _Handler(socketserver.BaseRequestHandler):
         sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
         while True:
             try:
-                frame = P.recv_frame(sock, max_frame=shard.max_frame)
+                frame = P.recv_frame_ex(sock, max_frame=shard.max_frame)
             except P.FrameTooLargeError as exc:
                 # refuse loudly so the client sees WHY, then close: the
                 # payload was never read, the stream cannot resynchronise
@@ -99,13 +99,21 @@ class _Handler(socketserver.BaseRequestHandler):
                 return
             if frame is None:
                 return  # clean EOF
-            kind, payload = frame
+            kind, payload, trace = frame
+            opname = P.OP_NAMES.get(kind, hex(kind))
+            # a v2 frame's trace header joins this server's spans to the
+            # client's trace; v1 frames dispatch untraced (span() no-ops)
+            prev = TRACER.activate(trace) if trace is not None else None
             try:
-                resp = shard.dispatch(kind, payload)
+                with TRACER.span(f"server.{opname}"):
+                    resp = shard.dispatch(kind, payload)
                 status = P.ST_OK
             except Exception as exc:
                 resp = P.pack_error(exc)
                 status = P.ST_ERR
+            finally:
+                if trace is not None:
+                    TRACER.restore(prev)
             try:
                 P.send_frame(sock, status, resp)
             except OSError:
@@ -138,13 +146,13 @@ class ShardServer:
             max_wait_s=max_wait_s,
             target_p99_s=target_p99_s,
         )
-        #: per-op request counts, exported via stats() — the observability a
-        #: router-side test (or operator) uses to see WHICH server answered.
-        #: Incremented under a lock: dispatch() runs concurrently on
-        #: per-connection handler threads, and a lost increment would make
-        #: replica-routing assertions flake.
-        self.op_counts: collections.Counter = collections.Counter()
-        self._op_lock = threading.Lock()
+        # per-op request counters, exported via stats() and /metrics — the
+        # observability a router-side test (or operator) uses to see WHICH
+        # server answered. Counter.inc() is lock-protected: dispatch() runs
+        # concurrently on per-connection handler threads, and a lost
+        # increment would make replica-routing assertions flake.
+        self._op_counters: dict[str, Counter] = {}
+        self._op_lock = threading.Lock()  # guards counter *creation* only
         self._tcp = _TCPServer((host, port), _Handler)
         self._tcp.shard_server = self  # type: ignore[attr-defined]
         self._thread: threading.Thread | None = None
@@ -203,11 +211,29 @@ class ShardServer:
     def __exit__(self, *exc) -> None:
         self.close()
 
+    @property
+    def op_counts(self) -> dict[str, int]:
+        """Per-op request counts as a plain dict (`.get(op, 0)` friendly)."""
+        with self._op_lock:
+            return {name: c.value for name, c in self._op_counters.items()}
+
+    def _count_op(self, opname: str) -> None:
+        with self._op_lock:
+            counter = self._op_counters.get(opname)
+            if counter is None:
+                counter = self._op_counters[opname] = REGISTRY.register(
+                    Counter("repro_rpc_requests_total",
+                            labels={"op": opname}))
+        counter.inc()
+
     # ---------------------------------------------------------------- dispatch
     def dispatch(self, kind: int, payload: bytes) -> bytes:
-        with self._op_lock:
-            self.op_counts[P.OP_NAMES.get(kind, hex(kind))] += 1
+        self._count_op(P.OP_NAMES.get(kind, hex(kind)))
         if kind == P.OP_PING:
+            if payload == P.CAPS_PROBE:
+                # capability negotiation: an old server would echo the probe
+                # verbatim; answering with JSON is what marks us trace-aware
+                return P.pack_json(P.SERVER_CAPS)
             return payload
         if kind == P.OP_GET:
             (i,) = P.unpack_ids(payload)
@@ -224,7 +250,16 @@ class ShardServer:
             strings = P.unpack_bytes_list(payload)
             return P.pack_ids(self.service.submit_extend(strings).result())
         if kind == P.OP_STATS:
-            return P.pack_json(self.stats())
+            opts = P.unpack_json(payload) if payload else {}
+            stats = self.stats()
+            if opts.get("metrics"):
+                # registry snapshot extension: mergeable histogram/counter
+                # states for client-side cross-shard aggregation
+                stats["metrics"] = REGISTRY.snapshot()
+            return P.pack_json(stats)
+        if kind == P.OP_TRACE_DUMP:
+            n = (P.unpack_json(payload) or {}).get("n", 16) if payload else 16
+            return P.pack_json(TRACER.trace_dump(n))
         if kind == P.OP_COMPACT:
             if not hasattr(self.store, "compact"):
                 raise TypeError("store is read-only; compact() refused")
@@ -243,8 +278,7 @@ class ShardServer:
         raise P.ProtocolError(f"unknown op 0x{kind:02x}")
 
     def stats(self) -> dict:
-        with self._op_lock:
-            ops = dict(self.op_counts)
+        ops = self.op_counts
         return {
             "n_strings": self.store.n_strings,
             "writable": hasattr(self.store, "extend"),
@@ -263,8 +297,15 @@ def run(
     max_wait_s: float = 0.0005,
     target_p99_s: float | None = None,
     announce: bool = True,
+    metrics_port: int | None = None,
 ) -> None:
-    """Open the store, print the readiness line, serve until interrupted."""
+    """Open the store, print the readiness line, serve until interrupted.
+
+    ``metrics_port`` (0 = kernel-assigned) additionally serves Prometheus
+    text on ``http://<host>:<metrics_port>/metrics`` plus the slow-request
+    trace dump on ``/traces``; the bound port rides the readiness line as
+    ``metrics_port=``.
+    """
     server = ShardServer.from_dir(
         path,
         read_only=read_only,
@@ -274,11 +315,15 @@ def run(
         max_wait_s=max_wait_s,
         target_p99_s=target_p99_s,
     )
+    metrics = (start_metrics_server(port=metrics_port, host=host)
+               if metrics_port is not None else None)
     if announce:
+        extra = f" metrics_port={metrics.port}" if metrics is not None else ""
         print(
             f"SHARD_SERVER_READY port={server.port} "
             f"n_strings={server.store.n_strings} "
-            f"writable={int(hasattr(server.store, 'extend'))} "
+            f"writable={int(hasattr(server.store, 'extend'))}"
+            f"{extra} "
             f"dir={json.dumps(path)}",
             flush=True,
         )
@@ -287,6 +332,8 @@ def run(
     except KeyboardInterrupt:
         pass
     finally:
+        if metrics is not None:
+            metrics.close()
         server.close()
 
 
@@ -302,6 +349,13 @@ def main(argv=None) -> None:
     )
     ap.add_argument("--max-batch", type=int, default=256)
     ap.add_argument("--max-wait-s", type=float, default=0.0005)
+    ap.add_argument(
+        "--metrics-port",
+        type=int,
+        default=None,
+        help="also serve Prometheus /metrics + /traces on this port "
+        "(0 = kernel-assigned; reported as metrics_port= on the READY line)",
+    )
     ap.add_argument(
         "--target-p99-ms",
         type=float,
@@ -321,6 +375,7 @@ def main(argv=None) -> None:
         target_p99_s=(
             None if args.target_p99_ms is None else args.target_p99_ms / 1e3
         ),
+        metrics_port=args.metrics_port,
     )
 
 

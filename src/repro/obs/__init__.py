@@ -1,0 +1,46 @@
+"""repro.obs — unified observability for the serving stack.
+
+One process-wide :data:`REGISTRY` of lock-cheap counters/gauges/fixed-bucket
+histograms (mergeable across shards and processes), one :data:`TRACER`
+carrying per-request trace ids through client → socket → service coalesce →
+store decode, and the export surfaces that read them: Prometheus text via
+:func:`start_metrics_server` (``--metrics-port``), the ``stats`` RPC metrics
+extension, and the per-server slow-request log :func:`trace_dump`.
+
+Stdlib only — importable on numpy-less, jax-less serving hosts.
+"""
+
+from repro.obs.http import MetricsServer, start_metrics_server
+from repro.obs.metrics import (
+    REGISTRY,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    default_latency_buckets_us,
+    get_registry,
+    merge_hist_states,
+    render_prometheus,
+    summarize_hist_state,
+)
+from repro.obs.trace import TRACER, TraceContext, Tracer, new_trace_id, trace_dump
+
+__all__ = [
+    "REGISTRY",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "MetricsServer",
+    "TRACER",
+    "TraceContext",
+    "Tracer",
+    "default_latency_buckets_us",
+    "get_registry",
+    "merge_hist_states",
+    "new_trace_id",
+    "render_prometheus",
+    "start_metrics_server",
+    "summarize_hist_state",
+    "trace_dump",
+]

@@ -43,7 +43,7 @@ import threading
 import time
 from concurrent.futures import Future
 
-from repro.core.metrics import LatencyReservoir
+from repro.obs import REGISTRY, TRACER, Counter, Histogram
 from repro.store.store import CompressedStringStore
 
 
@@ -68,8 +68,13 @@ class StoreService:
         self._q: queue.SimpleQueue = queue.SimpleQueue()
         self._stop = threading.Event()
         self._submit_lock = threading.Lock()  # orders submit() vs close()
-        self._lat_lock = threading.Lock()
-        self._lat = LatencyReservoir()
+        # per-service histogram (stats() stays instance-scoped), registered
+        # into the process registry so /metrics merges every service in the
+        # process into one repro_service_request_latency_us series
+        self._lat = REGISTRY.register(
+            Histogram("repro_service_request_latency_us"))
+        self._requests_total = REGISTRY.register(
+            Counter("repro_service_requests_total"))
         self.requests = 0
         self.batches = 0
         self.coalesced = 0          # requests answered in a batch of > 1
@@ -94,7 +99,8 @@ class StoreService:
             fut.set_exception(IndexError(
                 f"string id {i} out of range [0, {self.store.n_strings})"))
             return fut
-        self._enqueue(("get", i, fut, time.perf_counter()), fut, 1)
+        self._enqueue(("get", i, fut, time.perf_counter(),
+                       TRACER.current()), fut, 1)
         return fut
 
     def submit_multiget(self, ids) -> "Future[list[bytes]]":
@@ -114,8 +120,8 @@ class StoreService:
                 fut.set_exception(IndexError(
                     f"string id {i} out of range [0, {n})"))
                 return fut
-        self._enqueue(("multiget", ids, fut, time.perf_counter()),
-                      fut, len(ids))
+        self._enqueue(("multiget", ids, fut, time.perf_counter(),
+                       TRACER.current()), fut, len(ids))
         return fut
 
     def submit_append(self, s: bytes) -> "Future[int]":
@@ -130,7 +136,8 @@ class StoreService:
             fut.set_exception(TypeError(
                 "store is read-only (open a MutableStringStore to append)"))
             return fut
-        self._enqueue(("append", bytes(s), fut, time.perf_counter()), fut, 1)
+        self._enqueue(("append", bytes(s), fut, time.perf_counter(),
+                       TRACER.current()), fut, 1)
         return fut
 
     def submit_extend(self, strings) -> "Future[list[int]]":
@@ -146,8 +153,8 @@ class StoreService:
                 "store is read-only (open a MutableStringStore to append)"))
             return fut
         strings = [bytes(s) for s in strings]
-        self._enqueue(("extend", strings, fut, time.perf_counter()),
-                      fut, len(strings))
+        self._enqueue(("extend", strings, fut, time.perf_counter(),
+                       TRACER.current()), fut, len(strings))
         return fut
 
     def _enqueue(self, item, fut: Future, n_requests: int) -> None:
@@ -158,6 +165,7 @@ class StoreService:
                 fut.set_exception(RuntimeError("service is closed"))
                 return
             self.requests += n_requests
+            self._requests_total.inc(n_requests)
             self._q.put(item)
 
     def get(self, i: int, timeout: float | None = 30.0) -> bytes:
@@ -183,8 +191,7 @@ class StoreService:
         self.close()
 
     def stats(self) -> dict:
-        with self._lat_lock:
-            lat = self._lat.summary()
+        lat = self._lat.summary()
         return {"requests": self.requests, "batches": self.batches,
                 "coalesced": self.coalesced,
                 "avg_batch": round(self.requests / self.batches, 2)
@@ -196,7 +203,8 @@ class StoreService:
                 "max_wait_s": self.max_wait_s,
                 "target_p99_s": self.target_p99_s,
                 "wait_adjustments": self.wait_adjustments,
-                "request_latency": lat}
+                "request_latency": lat,
+                "request_latency_hist": self._lat.state()}
 
     # ----------------------------------------------------------------- worker
     def _collect_batch(self, first) -> list:
@@ -250,10 +258,15 @@ class StoreService:
             if reads:
                 self._serve_reads(reads)
             done = time.perf_counter()
-            lats = [done - t for _, _, _, t in batch]
-            with self._lat_lock:
-                for dt in lats:
-                    self._lat.record(dt)
+            lats = [done - t for _, _, _, t, _ in batch]
+            for dt in lats:
+                self._lat.record(dt * 1e6)
+            # one coalesce-wait span per traced request: the enqueue→answer
+            # window a trace shows as the price of micro-batching
+            for _, _, _, t0, ctx in batch:
+                if ctx is not None:
+                    TRACER.record_child("service.coalesce", ctx, t0,
+                                        done - t0, batch=len(batch))
             if self.target_p99_s is not None:
                 self._adapt_wait(lats)
             if len(batch) > 1:
@@ -294,19 +307,19 @@ class StoreService:
         store.extend, then split the contiguous ids back per request."""
         strings: list[bytes] = []
         spans: list[tuple[int, int]] = []  # [lo, hi) into `strings` per item
-        for kind, payload, _, _ in writes:
+        for kind, payload, _, _, _ in writes:
             lo = len(strings)
             strings.extend([payload] if kind == "append" else payload)
             spans.append((lo, len(strings)))
         try:
             new_ids = self.store.extend(strings)
         except Exception as exc:
-            for _, _, fut, _ in writes:
+            for _, _, fut, _, _ in writes:
                 fut.set_exception(exc)
             return
         self.appends += len(strings)
         self.append_batches += 1
-        for (kind, _, fut, _), (lo, hi) in zip(writes, spans):
+        for (kind, _, fut, _, _), (lo, hi) in zip(writes, spans):
             fut.set_result(new_ids[lo] if kind == "append"
                            else new_ids[lo:hi])
 
@@ -315,15 +328,22 @@ class StoreService:
         store.multiget, then slice the answers back per request."""
         ids: list[int] = []
         spans: list[tuple[int, int]] = []
-        for kind, payload, _, _ in reads:
+        for kind, payload, _, _, _ in reads:
             lo = len(ids)
             ids.extend([payload] if kind == "get" else payload)
             spans.append((lo, len(ids)))
+        # the fused multiget serves every read in the batch, but a span needs
+        # ONE parent — attach store-side spans to the first traced request
+        ctx = next((c for _, _, _, _, c in reads if c is not None), None)
+        prev = TRACER.activate(ctx) if ctx is not None else None
         try:
             values = self.store.multiget(ids)
         except Exception as exc:  # fail the whole batch, keep serving
-            for _, _, fut, _ in reads:
+            for _, _, fut, _, _ in reads:
                 fut.set_exception(exc)
             return
-        for (kind, _, fut, _), (lo, hi) in zip(reads, spans):
+        finally:
+            if ctx is not None:
+                TRACER.restore(prev)
+        for (kind, _, fut, _, _), (lo, hi) in zip(reads, spans):
             fut.set_result(values[lo] if kind == "get" else values[lo:hi])

@@ -9,13 +9,14 @@ from __future__ import annotations
 
 import time
 
-from repro.core.metrics import LatencyReservoir, throughput_mib_s
+from repro.core.metrics import throughput_mib_s
+from repro.obs import REGISTRY, Counter, Histogram
 
 
 class StoreStats:
     """Mutable counters updated by the store's hot path."""
 
-    def __init__(self) -> None:
+    def __init__(self, backend: str = "unknown") -> None:
         self.started_at = time.perf_counter()
         self.lookups = 0            # ids requested (incl. duplicates/cached)
         self.decoded_strings = 0    # strings actually decoded (cache misses)
@@ -25,12 +26,19 @@ class StoreStats:
         self.decode_seconds = 0.0
         self.scan_strings = 0
         self.jit_shapes: set[tuple[int, int]] = set()  # (B, T) decode shapes
-        self._lat = LatencyReservoir()  # per-multiget wall seconds
+        # per-store instruments (snapshot() stays instance-scoped) registered
+        # into the process registry, labelled by the resolved decode backend
+        labels = {"backend": backend}
+        self._lat = REGISTRY.register(Histogram(
+            "repro_store_multiget_latency_us", labels=labels))
+        self._lookups_total = REGISTRY.register(Counter(
+            "repro_store_lookups_total", labels=labels))
 
     # ------------------------------------------------------------- recording
     def record_multiget(self, n_ids: int, seconds: float) -> None:
         self.lookups += n_ids
-        self._lat.record(seconds)
+        self._lookups_total.inc(n_ids)
+        self._lat.record_seconds(seconds)
 
     def record_decode_batch(self, shape: tuple[int, int], n_real: int,
                             nbytes: int, seconds: float,
@@ -63,5 +71,6 @@ class StoreStats:
             ) if self.decode_seconds else 0.0,
             "lookups_per_s": round(self.lookups / elapsed, 1) if elapsed else 0.0,
             "multiget_latency": lat,
+            "multiget_latency_hist": self._lat.state(),
             "cache": cache_stats or {},
         }

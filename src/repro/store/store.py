@@ -30,6 +30,7 @@ from repro.core import registry
 from repro.core.api import CompressedCorpus
 from repro.core.artifact import DictArtifact
 from repro.core.packed import PackedDictionary
+from repro.obs import TRACER
 from repro.store.cache import LRUCache
 from repro.store.segment import SegmentedCorpus
 from repro.store.stats import StoreStats
@@ -99,7 +100,6 @@ class CompressedStringStore:
         self.corpus = corpus
         self.segments = SegmentedCorpus.from_corpus(corpus, strings_per_segment)
         self.cache = LRUCache(cache_bytes)
-        self.stats = StoreStats()
         self.batch_size = int(batch_size)
         self.num_buckets = int(num_buckets)
         self.use_pallas = use_pallas
@@ -119,6 +119,9 @@ class CompressedStringStore:
         elif backend not in ("jax", "numpy"):
             raise ValueError(f"unknown backend {backend!r}")
         self.backend = backend
+        # stats carries the resolved backend as a metric label, so it is
+        # created only once backend resolution has run
+        self.stats = StoreStats(backend=backend)
         self._device = OnPairDevice(self.dictionary) if backend == "jax" else None
         self._set_bucket_caps(corpus.token_counts())
 
@@ -313,7 +316,9 @@ class CompressedStringStore:
                     results[i] = b""  # claimed; overwritten by decode below
                     misses.append(i)
             if misses:
-                self._decode_misses(misses, results)
+                with TRACER.span("store.decode", batch=len(misses),
+                                 backend=self.backend):
+                    self._decode_misses(misses, results)
             out = [results[i] for i in ids]
         self.stats.record_multiget(len(ids), time.perf_counter() - t0)
         return out

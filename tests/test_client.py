@@ -154,15 +154,30 @@ def test_stats_schema_identical_across_all_four_frontends(
             key_sets[name] = frozenset(snap)
             # the unified schema every frontend must speak
             assert {"latency_summary", "throughput_mib_s", "wakeups",
-                    "ops", "n_strings", "backend"} <= key_sets[name]
+                    "ops", "n_strings", "backend", "server_ops",
+                    "store_latency"} <= key_sets[name]
             assert snap["n_strings"] == len(titles)
             assert snap["ops"]["multiget"] >= 1
             assert snap["latency_summary"]["count"] >= 2
             assert snap["throughput_mib_s"] > 0
+            # server_ops is present (key-set equality) on every backend …
+            assert set(snap["server_ops"]) == {"total", "per_shard"}
+            # … and store_latency reports the pooled decode percentiles
+            assert snap["store_latency"]["count"] >= 1
         assert len(set(key_sets.values())) == 1, key_sets
         # backends with a micro-batching service actually count wakeups
         assert clients["file"].stats()["wakeups"] >= 1
         assert clients["tcp"].stats()["wakeups"] >= 1
+        # … but only tcp:// has servers to report op counts: the summed
+        # totals and the per-shard breakdown both surface what the
+        # ShardServers counted (this used to be silently dropped)
+        tcp_ops = tcp_client.stats()["server_ops"]
+        assert tcp_ops["total"]["multiget"] >= 1
+        assert len(tcp_ops["per_shard"]) >= 1
+        assert sum(s["ops"].get("multiget", 0)
+                   for s in tcp_ops["per_shard"]) == tcp_ops["total"]["multiget"]
+        for name in ("file", "mut", "shard"):
+            assert clients[name].stats()["server_ops"]["total"] == {}
     finally:
         for name in ("file", "mut", "shard"):
             clients[name].close()

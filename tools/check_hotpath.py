@@ -1,0 +1,115 @@
+#!/usr/bin/env python
+"""Hot-path observability lint (CI gate).
+
+AST-walks the serving packages (``src/repro/{store,net,client,obs}``) and
+fails on two classes of latency bugs that keep sneaking back into serving
+code:
+
+1. **``time.time()`` in a hot path** — wall-clock time is not monotonic
+   (NTP slew makes latency samples negative or wildly large). Serving code
+   must use ``time.perf_counter()``; the tracer and every histogram in
+   ``repro.obs`` already do.
+
+2. **Unbounded latency-sample accumulation** — ``somelist.append(dt)`` /
+   ``.extend(lats)`` on a name that looks like a latency/sample collector
+   grows without bound under sustained load. Latency belongs in the
+   fixed-bucket ``repro.obs.Histogram`` (constant memory, mergeable) or a
+   bounded ring.
+
+Suppress a deliberate exception with ``# hotpath: ok`` on the offending
+line. Exit status is the number of violations (0 = clean).
+
+  PYTHONPATH=src python tools/check_hotpath.py
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+#: serving packages where the hot-path rules apply
+PACKAGES = ("store", "net", "client", "obs")
+#: attribute names whose .append/.extend looks like latency-sample hoarding
+_SAMPLEY = re.compile(
+    r"(^|_)(lat|lats|latency|latencies|sample|samples|duration|durations)($|_)"
+)
+_SUPPRESS = "# hotpath: ok"
+
+
+def _target_name(node: ast.expr) -> str | None:
+    """The receiver name of a ``<recv>.append(...)`` call, if plain."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+class _Checker(ast.NodeVisitor):
+    def __init__(self, path: str, source_lines: list[str]):
+        self.path = path
+        self.lines = source_lines
+        self.violations: list[str] = []
+
+    def _flag(self, node: ast.AST, message: str) -> None:
+        line = self.lines[node.lineno - 1] if node.lineno <= len(self.lines) else ""
+        if _SUPPRESS in line:
+            return
+        rel = os.path.relpath(self.path, REPO)
+        self.violations.append(f"{rel}:{node.lineno}: {message}")
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        # any mention of time.time — call or bare reference (aliasing it
+        # into a variable is the classic way past a call-only check)
+        if (node.attr == "time" and isinstance(node.value, ast.Name)
+                and node.value.id == "time"):
+            self._flag(node, "time.time is wall-clock (non-monotonic); "
+                             "use time.perf_counter()")
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        fn = node.func
+        if isinstance(fn, ast.Attribute) and fn.attr in ("append", "extend"):
+            recv = _target_name(fn.value)
+            if recv is not None and _SAMPLEY.search(recv):
+                self._flag(
+                    node,
+                    f"unbounded sample list: {recv}.{fn.attr}(...) — record "
+                    "into repro.obs.Histogram or a bounded ring instead")
+        self.generic_visit(node)
+
+
+def check_file(path: str) -> list[str]:
+    with open(path, encoding="utf-8") as f:
+        source = f.read()
+    checker = _Checker(path, source.splitlines())
+    checker.visit(ast.parse(source, filename=path))
+    return checker.violations
+
+
+def main(argv: list[str] | None = None) -> int:
+    roots = (argv if argv else
+             [os.path.join(REPO, "src", "repro", pkg) for pkg in PACKAGES])
+    violations: list[str] = []
+    n_files = 0
+    for root in roots:
+        if os.path.isfile(root):
+            n_files += 1
+            violations += check_file(root)
+            continue
+        for dirpath, _, filenames in os.walk(root):
+            for name in sorted(filenames):
+                if name.endswith(".py"):
+                    n_files += 1
+                    violations += check_file(os.path.join(dirpath, name))
+    for v in violations:
+        print(v)
+    print(f"check_hotpath: {n_files} files, {len(violations)} violation(s)")
+    return min(len(violations), 125)
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
