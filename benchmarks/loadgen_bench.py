@@ -1,0 +1,79 @@
+"""Loadgen benchmark: the SLO harness driving a spawned local cluster.
+
+One sharded corpus, one 2-shard multi-process cluster, two short runs of
+the same workload spec — closed loop (saturating throughput) and open
+loop (paced arrivals) — reporting client-achieved rate plus the merged
+*server-side* latency percentiles the SLO gate judges. This is the row
+set that lets CI gate on server p99, not just throughput.
+
+Emits the harness JSON schema (list of row dicts under results/bench).
+"""
+
+from __future__ import annotations
+
+import shutil
+import tempfile
+
+from benchmarks.common import dataset
+from repro.client import connect
+from repro.distributed import save_sharded
+from repro.loadgen import (
+    LocalCluster,
+    WorkloadSpec,
+    build_report,
+    run_workload,
+    snapshot_server_states,
+)
+from repro.store import CompressedStringStore
+
+
+def _row(loop: str, spec: WorkloadSpec, report: dict,
+         n_shards: int, dataset_name: str) -> dict:
+    run, server = report["run"], report["server_latency"]
+    return {
+        "dataset": dataset_name,
+        "loop": loop,
+        "transport": "rpc",
+        "n_shards": n_shards,
+        "concurrency": spec.concurrency,
+        "rate_target": spec.rate if loop == "open" else None,
+        "n": run["ops_issued"],
+        "duration_s": run["duration_s"],
+        "ops_s": run["achieved_rate"],
+        "error_rate": run["error_rate"],
+        "server_p50_us": server["p50_us"],
+        "server_p99_us": server["p99_us"],
+        "server_p999_us": server["p999_us"],
+        "client_p99_us": round(run["client_latency"]["p99_us"], 1),
+        "goodput_rps": report["goodput"]["rps_under_slo"],
+        "goodput_fraction": report["goodput"]["fraction_under_slo"],
+        "passed": report["passed"],
+    }
+
+
+def loadgen_bench(size_mib: int, duration_s: float = 4.0,
+                  n_shards: int = 2, seed: int = 0,
+                  dataset_name: str = "urls") -> list[dict]:
+    strings = dataset(dataset_name, size_mib << 20)
+    store = CompressedStringStore.build(
+        strings, sample_bytes=min(size_mib, 4) << 20, seed=seed)
+    dir_path = tempfile.mkdtemp(prefix="loadgen_bench_")
+    rows: list[dict] = []
+    try:
+        save_sharded(store, dir_path, n_shards)
+        with LocalCluster.spawn(dir_path, n_shards=n_shards) as cluster:
+            for loop in ("closed", "open"):
+                spec = WorkloadSpec(
+                    mix={"get": 0.7, "multiget": 0.3}, seed=seed,
+                    loop=loop, concurrency=64, rate=2000.0)
+                with connect(cluster.url, **cluster.connect_kw()) as client:
+                    client.multiget(list(range(min(256, len(strings)))))
+                    before = snapshot_server_states(client)
+                    result = run_workload(client, spec, duration_s)
+                    after = snapshot_server_states(client)
+                    report = build_report(spec, result, before, after,
+                                          client=client)
+                rows.append(_row(loop, spec, report, n_shards, dataset_name))
+    finally:
+        shutil.rmtree(dir_path, ignore_errors=True)
+    return rows

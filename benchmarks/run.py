@@ -182,6 +182,21 @@ def bench_client(size_mib: int) -> None:
               f"p99_us={r['p99_us']};per={r['latency_per']}")
 
 
+def bench_loadgen(size_mib: int) -> None:
+    """SLO-gated load harness: closed + open loop against a spawned
+    2-shard cluster; derived carries the server-side percentiles."""
+    from benchmarks.loadgen_bench import loadgen_bench
+    rows = loadgen_bench(size_mib, duration_s=2.0 if size_mib <= 1 else 4.0)
+    _dump("loadgen", rows)
+    for r in rows:
+        us = r["duration_s"] / max(1, r["n"]) * 1e6
+        _emit(f"loadgen/{r['loop']}/{r['transport']}", us,
+              f"ops_s={r['ops_s']};server_p50_us={r['server_p50_us']};"
+              f"server_p99_us={r['server_p99_us']};"
+              f"goodput_rps={r['goodput_rps']};"
+              f"client_p99_us={r['client_p99_us']}")
+
+
 def bench_persist(size_mib: int) -> None:
     """Artifact save/load + store.open latency vs retrain-from-scratch."""
     from benchmarks.persist_bench import persist_bench
@@ -221,6 +236,7 @@ ALL = {
     "persist": bench_persist,
     "rpc": bench_rpc,
     "client": bench_client,
+    "loadgen": bench_loadgen,
     "roofline": bench_roofline,
 }
 

@@ -60,6 +60,87 @@ from repro.store.service import StoreService
 from repro.store.store import CompressedStringStore
 
 
+class _GetBatcher:
+    """Client-side coalescer for router point lookups.
+
+    A router backend pays one RPC round-trip per ``get`` — the 297 lookups/s
+    tail the ISSUE calls out. This batcher gives single gets the same bulk
+    pipeline multiget already rides: pending gets accumulate while one
+    batched RPC is in flight and drain as ONE ``backend.multiget`` per
+    ``read_preference`` group. A lone get drains immediately (batch of one,
+    no added latency); pipelined gets coalesce into server-sized batches
+    automatically — Nagle without the timer.
+
+    Futures flip to RUNNING only at drain time, so a future cancelled while
+    still pending (a hedged read whose first attempt won) never reaches the
+    wire at all — the cancellation the hedging tests assert via server-side
+    op counters.
+    """
+
+    def __init__(self, backend, submit, max_batch: int = 512):
+        self._backend = backend
+        self._submit = submit  # client executor hand-off (trace-preserving)
+        self.max_batch = int(max_batch)
+        self._lock = threading.Lock()
+        self._pending: list[tuple] = []  # (id, pref, Future, TraceContext)
+        self._in_flight = False
+        self.batches = 0
+        self.coalesced = 0  # gets answered in a client-side batch of > 1
+
+    def submit_get(self, i: int, pref: str) -> Future:
+        fut: Future = Future()
+        with self._lock:
+            self._pending.append((int(i), pref, fut, TRACER.current()))
+            launch = not self._in_flight
+            if launch:
+                self._in_flight = True
+        if launch:
+            self._submit(self._drain)
+        return fut
+
+    def _drain(self) -> None:
+        while True:
+            with self._lock:
+                take = self._pending[: self.max_batch]
+                self._pending = self._pending[self.max_batch:]
+                if not take:
+                    self._in_flight = False
+                    return
+            # cancelled-while-pending futures drop out before the wire;
+            # survivors flip to RUNNING so a late cancel cannot race
+            live = [item for item in take
+                    if item[2].set_running_or_notify_cancel()]
+            if not live:
+                continue
+            self.batches += 1
+            if len(live) > 1:
+                self.coalesced += len(live)
+            groups: dict[str, list[tuple]] = {}
+            for item in live:
+                groups.setdefault(item[1], []).append(item)
+            for pref, items in groups.items():
+                self._serve_group(pref, items)
+
+    def _serve_group(self, pref: str, items: list[tuple]) -> None:
+        """One backend.multiget for every get in the group; the first traced
+        caller's context parents the fused rpc spans (same convention as the
+        service's coalesced decode)."""
+        ids = [i for i, _, _, _ in items]
+        ctx = next((c for _, _, _, c in items if c is not None), None)
+        prev = TRACER.activate(ctx) if ctx is not None else None
+        try:
+            values = self._backend.multiget(ids, read_preference=pref)
+        except Exception as exc:
+            for _, _, fut, _ in items:
+                fut.set_exception(exc)
+        else:
+            for (_, _, fut, _), v in zip(items, values):
+                fut.set_result(v)
+        finally:
+            if ctx is not None:
+                TRACER.restore(prev)
+
+
 class StoreClient:
     """Uniform session over one store backend. Use :func:`connect` (URL) or
     :func:`wrap` (already-open backend) instead of constructing directly."""
@@ -83,6 +164,10 @@ class StoreClient:
                                              thread_name_prefix="store-client"))
         self._closed = False
         self._lock = threading.Lock()
+        # router backends coalesce async point lookups client-side; local
+        # stores already coalesce through the service queue
+        self._get_batcher = (None if service is not None else
+                             _GetBatcher(backend, self._submit))
         # per-client histogram (stats() stays session-scoped), registered so
         # /metrics in a client process exports the same series name
         self._lat = REGISTRY.register(
@@ -90,6 +175,8 @@ class StoreClient:
         self._ops: dict[str, int] = {}
         self._bytes_moved = 0
         self._busy_s = 0.0
+        self._hedges = 0      # hedge attempts actually sent
+        self._hedge_wins = 0  # hedged requests answered by a later attempt
 
     # ------------------------------------------------------------ bookkeeping
     def _check_open(self) -> None:
@@ -188,9 +275,10 @@ class StoreClient:
             fut, ctx, pid = self._trace_submit(
                 lambda: self._service.submit(int(i)))
         else:
+            # ride the bulk multiget pipeline: pipelined gets coalesce into
+            # one RPC per drain instead of one round-trip per string
             fut, ctx, pid = self._trace_submit(
-                lambda: self._submit(self.backend.get, int(i),
-                                     read_preference=pref))
+                lambda: self._get_batcher.submit_get(int(i), pref))
         return self._tracked(fut, "get", t0, len, ctx, pid)
 
     def multiget_async(self, ids, *,
@@ -233,6 +321,151 @@ class StoreClient:
                 self._len_sum)
         return self.multiget_async(
             ids, read_preference=read_preference).result(
+            self.timeout if timeout is None else timeout)
+
+    # ---------------------------------------------------------- hedged reads
+    def _hedged_async(self, submit, prefs: tuple[str, ...], hedge_s: float,
+                      budget: int) -> Future:
+        """Tail-tolerant read: launch attempt 0 with ``prefs[0]``; if it has
+        not answered after ``hedge_s``, launch a second attempt with
+        ``prefs[1]`` (typically a replica) — first answer wins, the loser is
+        cancelled (a still-pending loser never reaches the wire; one already
+        in flight is abandoned). A failed attempt retries immediately while
+        the total attempt ``budget`` lasts, so one dead/slow server costs
+        one hedge window, not the caller's whole timeout.
+        """
+        out: Future = Future()
+        out.set_running_or_notify_cancel()  # resolved by callbacks below
+        lock = threading.Lock()
+        state = {"attempts": 0, "pending": [], "timer": None, "done": False}
+
+        def finish(result=None, exc=None) -> None:
+            with lock:
+                if state["done"]:
+                    return
+                state["done"] = True
+                timer, losers = state["timer"], list(state["pending"])
+                state["pending"] = []
+            if timer is not None:
+                timer.cancel()
+            for f in losers:
+                f.cancel()
+            if exc is not None:
+                out.set_exception(exc)
+            else:
+                out.set_result(result)
+
+        def on_done(f: Future) -> None:
+            with lock:
+                if f in state["pending"]:
+                    state["pending"].remove(f)
+                pending_left = bool(state["pending"])
+            if f.cancelled():
+                return
+            exc = f.exception()
+            if exc is None:
+                if getattr(f, "_hedge_attempt", 0) > 0:
+                    with self._lock:
+                        self._hedge_wins += 1
+                finish(result=f.result())
+                return
+            with lock:
+                can_retry = not state["done"] and state["attempts"] < budget
+            if can_retry:
+                launch()
+            elif not pending_left:
+                finish(exc=exc)
+
+        def launch() -> None:
+            with lock:
+                if state["done"] or state["attempts"] >= budget:
+                    return
+                k = state["attempts"]
+                state["attempts"] += 1
+            if k > 0:
+                with self._lock:
+                    self._hedges += 1
+            try:
+                f = submit(prefs[min(k, len(prefs) - 1)])
+            except Exception as exc:
+                finish(exc=exc)
+                return
+            f._hedge_attempt = k
+            with lock:
+                late = state["done"]
+                if not late:
+                    state["pending"].append(f)
+            if late:
+                f.cancel()
+            f.add_done_callback(on_done)
+
+        launch()
+        if budget > 1 and hedge_s is not None:
+            timer = threading.Timer(float(hedge_s), launch)
+            timer.daemon = True
+            with lock:
+                if not state["done"]:
+                    state["timer"] = timer
+                    timer.start()
+        return out
+
+    def _hedge_prefs(self, read_preference: str | None,
+                     hedge_preference: str) -> tuple[str, str]:
+        return (self._pref(read_preference),
+                check_read_preference(hedge_preference))
+
+    def get_hedged_async(self, i: int, *, hedge_ms: float = 10.0,
+                         budget: int = 2, read_preference: str | None = None,
+                         hedge_preference: str = "any") -> "Future[bytes]":
+        """Point lookup with a hedge: the second attempt (after ``hedge_ms``
+        without an answer, while the attempt ``budget`` lasts) targets
+        ``hedge_preference`` — against a replica-backed cluster the hedge
+        lands on a different server, which is what makes open-loop p999
+        honest under one slow shard."""
+        self._check_open()
+        prefs = self._hedge_prefs(read_preference, hedge_preference)
+        t0 = time.perf_counter()
+        i = int(i)
+        if self._service is not None:
+            def submit(_pref: str) -> Future:
+                return self._service.submit(i)
+        else:
+            def submit(pref: str) -> Future:
+                return self._get_batcher.submit_get(i, pref)
+        fut, ctx, pid = self._trace_submit(
+            lambda: self._hedged_async(submit, prefs, hedge_ms / 1e3,
+                                       int(budget)))
+        return self._tracked(fut, "get", t0, len, ctx, pid)
+
+    def multiget_hedged_async(self, ids, *, hedge_ms: float = 10.0,
+                              budget: int = 2,
+                              read_preference: str | None = None,
+                              hedge_preference: str = "any"
+                              ) -> "Future[list[bytes]]":
+        self._check_open()
+        prefs = self._hedge_prefs(read_preference, hedge_preference)
+        t0 = time.perf_counter()
+        ids = [int(i) for i in ids]
+        if self._service is not None:
+            def submit(_pref: str) -> Future:
+                return self._service.submit_multiget(ids)
+        else:
+            def submit(pref: str) -> Future:
+                return self._submit(self.backend.multiget, ids,
+                                    read_preference=pref)
+        fut, ctx, pid = self._trace_submit(
+            lambda: self._hedged_async(submit, prefs, hedge_ms / 1e3,
+                                       int(budget)))
+        return self._tracked(fut, "multiget", t0, self._len_sum, ctx, pid)
+
+    def get_hedged(self, i: int, *, timeout: float | None = None,
+                   **kw) -> bytes:
+        return self.get_hedged_async(i, **kw).result(
+            self.timeout if timeout is None else timeout)
+
+    def multiget_hedged(self, ids, *, timeout: float | None = None,
+                        **kw) -> list[bytes]:
+        return self.multiget_hedged_async(ids, **kw).result(
             self.timeout if timeout is None else timeout)
 
     def scan(self, lo: int, hi: int, *,
@@ -430,7 +663,13 @@ class StoreClient:
         with self._lock:
             ops = dict(self._ops)
             moved, busy = self._bytes_moved, self._busy_s
+            hedges, hedge_wins = self._hedges, self._hedge_wins
+        batcher = self._get_batcher
         return {
+            "hedges": hedges,
+            "hedge_wins": hedge_wins,
+            "get_batches": batcher.batches if batcher is not None else 0,
+            "coalesced_gets": batcher.coalesced if batcher is not None else 0,
             "scheme": self.scheme,
             "url": self.url,
             "n_strings": self.n_strings,

@@ -109,6 +109,45 @@ def save_sharded(store: CompressedStringStore, dir_path: str,
     return bounds
 
 
+def record_replicas(dir_path: str,
+                    replicas: dict[int, list[tuple[str, int]]]) -> dict:
+    """Publish replica server addresses into the cluster manifest.
+
+    A spawner that starts ``--read-only`` servers (the loadgen cluster
+    harness, an operator's init script) records them here so every later
+    ``connect("tcp://...", dir_path=dir)`` discovers and registers them
+    automatically — read load-balancing without manual
+    ``register_replica`` wiring. Addresses replace any prior entry for the
+    same shard; an empty list clears it. Returns the full replica map.
+    """
+    path = os.path.join(dir_path, MANIFEST)
+    with open(path) as f:
+        manifest = json.load(f)
+    current = manifest.get("replicas", {})
+    for shard, addrs in replicas.items():
+        key = str(int(shard))
+        addrs = [[str(h), int(p)] for h, p in addrs]
+        if addrs:
+            current[key] = addrs
+        else:
+            current.pop(key, None)
+    manifest["replicas"] = current
+    write_json_atomic(path, manifest)
+    return {int(k): [(h, p) for h, p in v] for k, v in current.items()}
+
+
+def manifest_replicas(dir_path: str) -> dict[int, list[tuple[str, int]]]:
+    """The manifest's replica map: ``{shard: [(host, port), ...]}`` (empty
+    when the manifest has none or the directory is not a sharded layout)."""
+    path = os.path.join(dir_path, MANIFEST)
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        manifest = json.load(f)
+    return {int(k): [(str(h), int(p)) for h, p in v]
+            for k, v in manifest.get("replicas", {}).items()}
+
+
 def open_shard(dir_path: str, shard: int, mmap: bool = True,
                source=None, writable: bool = False,
                **overrides) -> CompressedStringStore:

@@ -311,12 +311,21 @@ class DistributedStringStore(ShardRouter):
         bounds: list[tuple[int, int]] | None = None,
         dir_path: str | None = None,
         client_kw: dict | None = None,
+        auto_replicas: bool = True,
         **kw,
     ) -> "DistributedStringStore":
         """Connect to shard servers (``[(host, port), ...]``, in shard
         order). Without explicit ``bounds`` each shard is asked its
         ``n_strings`` and the contiguous global bounds are derived — the
-        live-cluster equivalent of reading the manifest."""
+        live-cluster equivalent of reading the manifest.
+
+        With ``dir_path`` (and ``auto_replicas`` left on) any replica
+        addresses recorded in the cluster manifest
+        (:func:`repro.distributed.shard_store.record_replicas`) register
+        automatically, so ``read_preference="replica"|"any"`` load-balances
+        without manual wiring. A recorded replica that is down or refuses
+        (e.g. restarted writable) is skipped — discovery must not fail the
+        connect."""
         clients = [RemoteShardClient(a, **(client_kw or {})) for a in addresses]
         try:
             if bounds is None:
@@ -326,7 +335,7 @@ class DistributedStringStore(ShardRouter):
                     n = c.n_strings
                     bounds.append((lo, lo + n))
                     lo += n
-            return cls(clients, bounds, dir_path=dir_path, **kw)
+            store = cls(clients, bounds, dir_path=dir_path, **kw)
         except BaseException:
             # bounds derivation already opened sockets (n_strings is an
             # RPC); a dead shard or a bad constructor kwarg must not leak
@@ -334,6 +343,33 @@ class DistributedStringStore(ShardRouter):
             for c in clients:
                 c.close()
             raise
+        if auto_replicas and dir_path is not None:
+            store.discover_replicas(client_kw=client_kw)
+        return store
+
+    def discover_replicas(self, client_kw: dict | None = None) -> int:
+        """Register every manifest-recorded replica not already attached;
+        returns how many registered. Callable again after a spawner adds
+        replicas to a live cluster."""
+        if self._dir is None:
+            return 0
+        from repro.distributed.shard_store import manifest_replicas
+
+        registered = 0
+        for shard, addrs in manifest_replicas(self._dir).items():
+            if not 0 <= shard < len(self.clients):
+                continue
+            known = {c.address for c, _ in self._replicas.get(shard, ())}
+            for addr in addrs:
+                addr = (str(addr[0]), int(addr[1]))
+                if addr in known or addr == self.clients[shard].address:
+                    continue
+                try:
+                    self.register_replica(shard, addr, **(client_kw or {}))
+                    registered += 1
+                except (OSError, ConnectionError, ValueError):
+                    continue  # down or not a read-only replica: skip
+        return registered
 
     def close(self) -> None:
         self._pool.shutdown(wait=False)

@@ -18,10 +18,18 @@ from repro.obs.metrics import (
     Histogram,
     MetricsRegistry,
     default_latency_buckets_us,
+    diff_hist_states,
     get_registry,
     merge_hist_states,
     render_prometheus,
     summarize_hist_state,
+)
+from repro.obs.scrape import (
+    fetch_metrics,
+    fetch_traces,
+    find_series,
+    hist_state_from_rows,
+    parse_prometheus,
 )
 from repro.obs.trace import TRACER, TraceContext, Tracer, new_trace_id, trace_dump
 
@@ -36,9 +44,15 @@ __all__ = [
     "TraceContext",
     "Tracer",
     "default_latency_buckets_us",
+    "diff_hist_states",
+    "fetch_metrics",
+    "fetch_traces",
+    "find_series",
     "get_registry",
+    "hist_state_from_rows",
     "merge_hist_states",
     "new_trace_id",
+    "parse_prometheus",
     "render_prometheus",
     "start_metrics_server",
     "summarize_hist_state",

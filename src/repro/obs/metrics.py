@@ -221,6 +221,26 @@ def merge_hist_states(states) -> dict | None:
     return merged
 
 
+def diff_hist_states(after: dict | None, before: dict | None) -> dict | None:
+    """Bucket-wise ``after - before`` for two snapshots of the SAME
+    (growing) histogram — the state a load run contributes on top of
+    whatever the server had already served. Negative deltas (a restarted
+    server) clamp to zero rather than corrupt percentiles. ``before=None``
+    means "no prior snapshot": the after state passes through unchanged."""
+    if not after:
+        return None
+    if not before:
+        return {"bounds": list(after["bounds"]),
+                "counts": [int(c) for c in after["counts"]],
+                "sum": float(after["sum"])}
+    if list(after["bounds"]) != list(before["bounds"]):
+        raise ValueError("cannot diff histograms with different bounds")
+    counts = [max(0, int(a) - int(b))
+              for a, b in zip(after["counts"], before["counts"])]
+    return {"bounds": list(after["bounds"]), "counts": counts,
+            "sum": max(0.0, float(after["sum"]) - float(before["sum"]))}
+
+
 def summarize_hist_state(state: dict | None) -> dict:
     """Snapshot -> the unified latency summary dict (us units)."""
     if not state or not sum(state["counts"]):

@@ -31,7 +31,7 @@ import sys
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 #: serving packages where the hot-path rules apply
-PACKAGES = ("store", "net", "client", "obs")
+PACKAGES = ("store", "net", "client", "obs", "loadgen")
 #: attribute names whose .append/.extend looks like latency-sample hoarding
 _SAMPLEY = re.compile(
     r"(^|_)(lat|lats|latency|latencies|sample|samples|duration|durations)($|_)"
