@@ -165,6 +165,21 @@ def rpc_bench(size_mib: int, n_queries: int = 5000, batch: int = 256,
             lat = _time_batches(dist.extend, append_batches)
             rows.append(row("extend-512", "rpc", lat, len(appends), "batch",
                             "strings_per_s"))
+            # pipelined singles on the WRITE path: append_async + the
+            # client-side extend batcher group-commit pending appends into
+            # bulk extend RPCs, and the server folds each drained batch
+            # into one Encoder pass — the write-side mirror of rpc/get
+            pipelined_appends = [b"rpc-bench-gc-%d " % i + appends[i]
+                                 for i in range(1024)]
+            lat, wall = _time_pipelined(dist.append_async, pipelined_appends)
+            r = row("append-pipelined", "rpc", lat, len(pipelined_appends),
+                    "append", "strings_per_s")
+            r["strings_per_s"] = round(len(pipelined_appends)
+                                       / max(wall, 1e-9), 1)
+            r["total_s"] = round(wall, 4)
+            r["pipelined"] = True
+            r["window"] = 256
+            rows.append(r)
             dist.close()
         finally:
             for p in procs:

@@ -184,6 +184,7 @@ BASELINE_METRICS = {
     "rpc/multiget/rpc/lookups_s": None,
     "rpc/get/rpc/lookups_s": None,
     "rpc/extend-512/rpc/strings_s": None,
+    "rpc/append-pipelined/rpc/strings_s": None,
     "client/multiget/shard/lookups_s": None,
     "loadgen/closed/rpc/ops_s": None,
     "loadgen/closed/rpc/server_p99_us": 10.0,

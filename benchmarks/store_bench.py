@@ -15,6 +15,8 @@ throughput (lookups/s, MiB/s) and p50/p99 latency per batch from
 
 from __future__ import annotations
 
+import gc
+import os
 import time
 
 import numpy as np
@@ -123,8 +125,11 @@ def store_ingest_bench(size_mib: int, seed: int = 0,
                  "strings_per_s": round(len(one_by_one) / dt, 1),
                  "mib_s": round(throughput_mib_s(raw, dt), 2)})
 
-    # batched appends (one Encoder pass per batch, seals amortised)
+    # batched appends (one Encoder pass per batch, seals amortised). The
+    # collect isolates this phase from the append bench's allocator debris
+    # (5000 per-call appends leave enough garbage to cost ~15% here).
     store = build()
+    gc.collect()
     with wrap(store) as client:
         t0 = time.perf_counter()
         for k in range(0, len(incoming), 1024):
@@ -137,6 +142,30 @@ def store_ingest_bench(size_mib: int, seed: int = 0,
                  "mib_s": round(throughput_mib_s(raw, dt), 2),
                  "n_segments": store.segments.n_segments,
                  "tail": store.stats_snapshot()["n_tail_strings"]})
+
+    # pallas-backend encode row, reported alongside the numpy rows but never
+    # baseline-gated: it is absent on REPRO_NO_JAX hosts (the CI smoke), and
+    # this container runs the kernel in interpret mode, so n stays small
+    try:
+        if os.environ.get("REPRO_NO_JAX"):
+            raise ImportError("REPRO_NO_JAX is set")
+        from repro.kernels.ops import OnPairDevice  # noqa: F401
+        have_pallas = True
+    except Exception:
+        have_pallas = False
+    if have_pallas:
+        store = MutableStringStore((art, codec), codec.compress(base),
+                                   strings_per_segment=4096, cache_bytes=0,
+                                   encode_backend="pallas")
+        small = incoming[:256]
+        t0 = time.perf_counter()
+        store.extend(small)
+        dt = time.perf_counter() - t0
+        raw = sum(len(s) for s in small)
+        rows.append({"dataset": dataset_name, "op": "extend-pallas-256",
+                     "n_strings": len(small), "total_s": round(dt, 4),
+                     "strings_per_s": round(len(small) / dt, 1),
+                     "mib_s": round(throughput_mib_s(raw, dt), 2)})
 
     # drift -> compact cycle: append a different distribution, then rewrite
     drifted = dataset(drift_dataset, min(size_mib, 2) << 20)

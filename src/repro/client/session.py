@@ -141,6 +141,87 @@ class _GetBatcher:
                 TRACER.restore(prev)
 
 
+class _ExtendBatcher:
+    """Client-side group-commit for router writes (mirror of
+    :class:`_GetBatcher`).
+
+    A router backend pays one RPC round-trip per ``extend`` — and one per
+    ``append``. Pending writes accumulate while one bulk RPC is in flight
+    and drain as ONE ``backend.extend`` over the concatenated strings; the
+    id list the backend returns (aligned with input order) is split back
+    per caller by span. Single appends ride the same queue as one-string
+    extends, so pipelined appends group-commit into the server's batched
+    Encoder pass exactly like the service queue does for local stores.
+
+    Futures flip to RUNNING only at drain time: a write cancelled while
+    still pending never reaches the wire.
+    """
+
+    def __init__(self, backend, submit, max_batch: int = 4096):
+        self._backend = backend
+        self._submit = submit  # client executor hand-off (trace-preserving)
+        self.max_batch = int(max_batch)  # strings per drained RPC, not calls
+        self._lock = threading.Lock()
+        self._pending: list[tuple] = []  # (strings, Future, TraceContext)
+        self._in_flight = False
+        self.batches = 0
+        self.coalesced = 0  # extend/append calls fused into a batch of > 1
+
+    def submit_extend(self, strings: list[bytes]) -> Future:
+        fut: Future = Future()
+        with self._lock:
+            self._pending.append((strings, fut, TRACER.current()))
+            launch = not self._in_flight
+            if launch:
+                self._in_flight = True
+        if launch:
+            self._submit(self._drain)
+        return fut
+
+    def _drain(self) -> None:
+        while True:
+            take: list[tuple] = []
+            n = 0
+            with self._lock:
+                # at least one call per round; stop adding once the drained
+                # RPC would exceed max_batch strings (an oversized single
+                # call still goes out whole — the server chunks internally)
+                while self._pending and (not take or
+                                         n + len(self._pending[0][0])
+                                         <= self.max_batch):
+                    item = self._pending.pop(0)
+                    take.append(item)
+                    n += len(item[0])
+                if not take:
+                    self._in_flight = False
+                    return
+            live = [item for item in take
+                    if item[1].set_running_or_notify_cancel()]
+            if not live:
+                continue
+            self.batches += 1
+            if len(live) > 1:
+                self.coalesced += len(live)
+            flat: list[bytes] = []
+            spans: list[tuple[int, int]] = []
+            for strings, _, _ in live:
+                spans.append((len(flat), len(flat) + len(strings)))
+                flat.extend(strings)
+            ctx = next((c for _, _, c in live if c is not None), None)
+            prev = TRACER.activate(ctx) if ctx is not None else None
+            try:
+                ids = self._backend.extend(flat)
+            except Exception as exc:
+                for _, fut, _ in live:
+                    fut.set_exception(exc)
+            else:
+                for (_, fut, _), (lo, hi) in zip(live, spans):
+                    fut.set_result(ids[lo:hi])
+            finally:
+                if ctx is not None:
+                    TRACER.restore(prev)
+
+
 class StoreClient:
     """Uniform session over one store backend. Use :func:`connect` (URL) or
     :func:`wrap` (already-open backend) instead of constructing directly."""
@@ -168,6 +249,10 @@ class StoreClient:
         # stores already coalesce through the service queue
         self._get_batcher = (None if service is not None else
                              _GetBatcher(backend, self._submit))
+        # ...and async writes the same way: pipelined extends/appends fuse
+        # into one bulk RPC per drain (group-commit at the client edge)
+        self._extend_batcher = (None if service is not None else
+                                _ExtendBatcher(backend, self._submit))
         # per-client histogram (stats() stays session-scoped), registered so
         # /metrics in a client process exports the same series name
         self._lat = REGISTRY.register(
@@ -512,8 +597,24 @@ class StoreClient:
                 lambda: self._service.submit_append(bytes(s)))
         else:
             fut, ctx, pid = self._trace_submit(
-                lambda: self._submit(self._router_append, bytes(s)))
+                lambda: self._append_via_batcher(bytes(s)))
         return self._tracked(fut, "append", t0, lambda _i: len(s), ctx, pid)
+
+    def _append_via_batcher(self, s: bytes) -> "Future[int]":
+        """A single append rides the extend batcher as a one-string extend,
+        so pipelined appends group-commit; the id list unwraps to one id."""
+        inner = self._extend_batcher.submit_extend([s])
+        out: Future = Future()
+
+        def _done(f: Future) -> None:
+            if f.cancelled():
+                out.cancel()
+            elif f.exception() is not None:
+                out.set_exception(f.exception())
+            else:
+                out.set_result(f.result()[0])
+        inner.add_done_callback(_done)
+        return out
 
     def extend_async(self, strings) -> "Future[list[int]]":
         """One batched append as a future; local stores fold concurrent
@@ -527,14 +628,8 @@ class StoreClient:
                 lambda: self._service.submit_extend(strings))
         else:
             fut, ctx, pid = self._trace_submit(
-                lambda: self._submit(self._router_extend, strings))
+                lambda: self._extend_batcher.submit_extend(strings))
         return self._tracked(fut, "extend", t0, lambda _ids: nbytes, ctx, pid)
-
-    def _router_append(self, s: bytes) -> int:
-        return self.backend.append(s)
-
-    def _router_extend(self, strings: list[bytes]) -> list[int]:
-        return self.backend.extend(strings)
 
     def append(self, s: bytes, *, timeout: float | None = None) -> int:
         if self._service is None and timeout is None:
@@ -665,11 +760,14 @@ class StoreClient:
             moved, busy = self._bytes_moved, self._busy_s
             hedges, hedge_wins = self._hedges, self._hedge_wins
         batcher = self._get_batcher
+        wb = self._extend_batcher
         return {
             "hedges": hedges,
             "hedge_wins": hedge_wins,
             "get_batches": batcher.batches if batcher is not None else 0,
             "coalesced_gets": batcher.coalesced if batcher is not None else 0,
+            "extend_batches": wb.batches if wb is not None else 0,
+            "coalesced_extends": wb.coalesced if wb is not None else 0,
             "scheme": self.scheme,
             "url": self.url,
             "n_strings": self.n_strings,

@@ -60,10 +60,16 @@ class Encoder:
     """
 
     def __init__(self, artifact: DictArtifact, backend: str = "numpy",
-                 codec=None):
+                 codec=None, device=None):
         self.artifact = artifact
         self.backend = backend
-        self._device = _check_backend(artifact, backend)
+        # ``device`` optionally supplies an already-built OnPairDevice for the
+        # same artifact (e.g. a store's decode device) so its packed tables
+        # and compiled kernels are shared instead of rebuilt.
+        if device is not None and backend == "pallas":
+            self._device = device
+        else:
+            self._device = _check_backend(artifact, backend)
         # the host codec (and its PackedDictionary rebuild) is only needed on
         # the numpy path; the pallas path decodes through the device tables
         self._codec = None
@@ -71,14 +77,26 @@ class Encoder:
             self._codec = (codec if codec is not None
                            else registry.codec_from_artifact(artifact))
 
+    def warm(self) -> None:
+        """AOT-compile the device encode buckets (no-op on the numpy path)."""
+        if self._device is not None:
+            self._device.warm_encode()
+
     def encode(self, strings: list[bytes]) -> CompressedCorpus:
         """Compress every string independently into one corpus."""
         if self._device is None:
             return self._codec.compress(strings)
-        from repro.core.api import pack_corpus
-        parts = self._device.encode_to_bytes(strings)
-        return pack_corpus(parts, sum(len(s) for s in strings),
-                           compressor=registry.resolve(self.artifact.codec))
+        toks = self._device.encode_bucketed(strings)
+        counts = np.fromiter((t.size for t in toks), dtype=np.int64,
+                             count=len(toks))
+        offsets = np.zeros(len(toks) + 1, dtype=np.int64)
+        np.cumsum(counts * 2, out=offsets[1:])
+        payload = (np.concatenate(toks).astype("<u2").view(np.uint8)
+                   if len(toks) else np.zeros(0, dtype=np.uint8))
+        return CompressedCorpus(payload=payload, offsets=offsets,
+                                raw_bytes=sum(len(s) for s in strings),
+                                meta={"compressor":
+                                      registry.resolve(self.artifact.codec)})
 
     def encode_one(self, s: bytes) -> bytes:
         """Compressed payload of a single string."""

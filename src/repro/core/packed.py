@@ -48,6 +48,12 @@ def hash_key(lo: int, hi: int, length: int) -> int:
     return mix32(lo ^ mix32(hi ^ mix32(length)))
 
 
+def hash_key_long(lo: int, hi: int, lo2: int, hi2: int, length: int) -> int:
+    """Hash of a full 16-byte packed key (bounded long entries); must match
+    the vectorised probe in core.lpm exactly."""
+    return mix32(lo ^ mix32(hi ^ mix32(lo2 ^ mix32(hi2 ^ mix32(length)))))
+
+
 def split_u64(value: int) -> tuple[int, int]:
     return value & _M32, (value >> 32) & _M32
 
@@ -89,6 +95,31 @@ def _build_table(keys: list[tuple[int, int, int]], payloads: list[int],
     return tbl_lo, tbl_hi, tbl_len, tbl_payload, max_probes
 
 
+def _build_table_long(keys: list[tuple[int, int, int, int, int]],
+                      payloads: list[int]):
+    """Open-addressing table over full 16-byte packed keys (long entries)."""
+    n = len(keys)
+    size = 16
+    while size < 2 * max(n, 1):
+        size *= 2
+    tbl = [np.zeros(size, dtype=U32) for _ in range(4)]
+    tbl_len = np.zeros(size, dtype=np.int32)
+    tbl_payload = np.full(size, -1, dtype=np.int32)
+    mask = size - 1
+    max_probes = 1
+    for (lo, hi, lo2, hi2, length), payload in zip(keys, payloads):
+        slot = hash_key_long(lo, hi, lo2, hi2, length) & mask
+        probes = 1
+        while tbl_len[slot] != 0:
+            slot = (slot + 1) & mask
+            probes += 1
+        tbl[0][slot], tbl[1][slot], tbl[2][slot], tbl[3][slot] = lo, hi, lo2, hi2
+        tbl_len[slot] = length
+        tbl_payload[slot] = payload
+        max_probes = max(max_probes, probes)
+    return tbl[0], tbl[1], tbl[2], tbl[3], tbl_len, tbl_payload, max_probes
+
+
 @dataclass
 class PackedDictionary:
     """Frozen OnPair/OnPair16 dictionary with decode + static-LPM layouts."""
@@ -122,6 +153,24 @@ class PackedDictionary:
     suf_hi: np.ndarray
     suf_len: np.ndarray       # i32[M]  full suffix length (may exceed 8 for OnPair)
     suf_tok: np.ndarray       # i32[M]
+    # byte masks selecting each suffix's live bytes of (suf_lo, suf_hi) —
+    # precomputed so the batched parser compares without per-call mask math
+    suf_mlo: np.ndarray       # u32[M]
+    suf_mhi: np.ndarray       # u32[M]
+
+    # --- static LPM: exact long-entry table (9..16-byte entries) ---
+    # Bounded (variant16) dictionaries admit a second long-tier layout: every
+    # long entry fits one 16-byte window, so the batched parser can replace
+    # the bucket *scan* with 8 exact hash probes (lengths 16 down to 9) —
+    # rectangular work per string, like the short tier. Only consulted when
+    # ``variant16`` (unbounded entries still need the bucket scan).
+    l_lo: np.ndarray          # u32  entry bytes 0..3, packed LE
+    l_hi: np.ndarray          # u32  entry bytes 4..7
+    l_lo2: np.ndarray         # u32  entry bytes 8..11 (zero padded)
+    l_hi2: np.ndarray         # u32  entry bytes 12..15 (zero padded)
+    l_len: np.ndarray         # i32  0 = empty slot
+    l_tok: np.ndarray         # i32
+    l_probe_max: int
 
     # ------------------------------------------------------------------ build
     @classmethod
@@ -170,6 +219,25 @@ class PackedDictionary:
         p_lo, p_hi, p_len, p_bucket, p_probe_max = _build_table(
             prefix_keys, bucket_ids, empty_payload=-1)
 
+        suf_len_arr = np.array(suf_len_l or [0], dtype=np.int32)
+        mlo_n = np.clip(suf_len_arr, 0, 4).astype(np.uint64)
+        mhi_n = np.clip(suf_len_arr - 4, 0, 4).astype(np.uint64)
+        one = np.uint64(1)
+        eight = np.uint64(8)
+
+        # exact long-entry table: every 9..16-byte entry keyed by its full
+        # packed bytes (>16-byte entries can't use it and are left out; the
+        # table is only consulted for variant16 dictionaries)
+        long_keys, long_payloads = [], []
+        for tid, e in enumerate(entries):
+            if 8 < len(e) <= 16:
+                lo, hi = _pack_lo_hi(e)
+                lo2, hi2 = _pack_lo_hi(e[8:])
+                long_keys.append((lo, hi, lo2, hi2, len(e)))
+                long_payloads.append(tid)
+        l_lo, l_hi, l_lo2, l_hi2, l_len, l_tok, l_probe_max = \
+            _build_table_long(long_keys, long_payloads)
+
         return cls(
             entries=entries, variant16=variant16,
             blob=blob, offsets=offsets, lens=lens, mat16=mat16,
@@ -182,8 +250,12 @@ class PackedDictionary:
             max_bucket_size=int(max(bucket_size_l, default=0)),
             suf_lo=np.array(suf_lo_l or [0], dtype=U32),
             suf_hi=np.array(suf_hi_l or [0], dtype=U32),
-            suf_len=np.array(suf_len_l or [0], dtype=np.int32),
+            suf_len=suf_len_arr,
             suf_tok=np.array(suf_tok_l or [0], dtype=np.int32),
+            suf_mlo=((one << (mlo_n * eight)) - one).astype(U32),
+            suf_mhi=((one << (mhi_n * eight)) - one).astype(U32),
+            l_lo=l_lo, l_hi=l_hi, l_lo2=l_lo2, l_hi2=l_hi2, l_len=l_len,
+            l_tok=l_tok, l_probe_max=l_probe_max,
         )
 
     # ------------------------------------------------------------- accounting

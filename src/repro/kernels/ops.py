@@ -29,6 +29,14 @@ def _pad_to(x: int, multiple: int) -> int:
     return ((x + multiple - 1) // multiple) * multiple
 
 
+#: geometric byte-length bucket capacities seeding the bucketed encode path;
+#: grown by doubling when a longer string arrives, so the set of compiled
+#: encode shapes stays bounded no matter the batch mix
+_ENCODE_LEN_BUCKETS = (32, 128, 512)
+#: static batch dimension of every bucketed encode launch
+_ENCODE_PAD_BATCH = 64
+
+
 def pack_strings(strings: list[bytes], pad_len: int | None = None,
                  pad_extra: int = 16) -> tuple[np.ndarray, np.ndarray]:
     """list[bytes] -> (data int32[B, L+pad_extra], lens int32[B])."""
@@ -76,6 +84,15 @@ class OnPairDevice:
                              "unbounded OnPair stays on the host path")
         self.dictionary = dictionary
         self.dd = DeviceDict.build(dictionary)
+        # Bucketed-encode state: every launch uses a static
+        # (encode_pad_batch, cap + 16) shape drawn from encode_len_caps, so
+        # the number of compiled encode traces is bounded by the bucket set
+        # rather than by the batch mix (mirrors the multiget_decode buckets).
+        self.encode_len_caps: list[int] = list(_ENCODE_LEN_BUCKETS)
+        self.encode_pad_batch: int = _ENCODE_PAD_BATCH
+        #: every (B, L) data shape handed to the encode kernels — tests assert
+        #: this stays bounded under mixed-length workloads
+        self.encode_shapes: set[tuple[int, int]] = set()
 
     @classmethod
     def from_artifact(cls, artifact) -> "OnPairDevice":
@@ -91,19 +108,70 @@ class OnPairDevice:
 
     # ----------------------------------------------------------- encode
     def encode_batch(self, strings: list[bytes], use_pallas: bool = True,
-                     max_tokens: int | None = None):
-        """Compress a batch; returns (tokens int32[B,T], n_tokens int32[B])."""
-        data, lens = pack_strings(strings)
+                     max_tokens: int | None = None,
+                     pad_len: int | None = None):
+        """Compress a batch; returns (tokens int32[B,T], n_tokens int32[B]).
+
+        With no ``pad_len``/``max_tokens`` the data width (and hence the jit
+        trace) follows the longest string in the batch — fine for one-off
+        calls, unbounded retraces under a mixed workload. Serving paths go
+        through :meth:`encode_bucketed`, which pins both.
+        """
+        data, lens = pack_strings(strings, pad_len=pad_len)
         if max_tokens is None:
             max_tokens = data.shape[1] - 16 or 1
+        self.encode_shapes.add((data.shape[0], data.shape[1]))
         fn = (onpair_encode.encode_batch_pallas if use_pallas
               else encode_batch_ref_jit)
         toks, n = fn(jnp.asarray(data), jnp.asarray(lens), self.dd, max_tokens)
         return np.asarray(toks), np.asarray(n)
 
+    def _encode_cap(self, n: int) -> int:
+        """Smallest bucket capacity >= n bytes, growing the set by doubling."""
+        for cap in self.encode_len_caps:
+            if n <= cap:
+                return cap
+        cap = self.encode_len_caps[-1]
+        while cap < n:
+            cap *= 2
+            self.encode_len_caps.append(cap)
+        return cap
+
+    def encode_bucketed(self, strings: list[bytes],
+                        use_pallas: bool = True) -> list[np.ndarray]:
+        """Batch encode with a bounded set of compiled shapes.
+
+        Strings are grouped into geometric byte-length buckets; each group is
+        padded (with empty rows) to ``encode_pad_batch`` and encoded at the
+        static shape (pad_batch, cap + 16) with ``max_tokens = cap`` (one
+        token per byte is the worst case). Returns the per-string int32 token
+        arrays in input order.
+        """
+        out: list[np.ndarray] = [None] * len(strings)  # type: ignore[list-item]
+        pb = self.encode_pad_batch
+        groups: dict[int, list[int]] = {}
+        for i, s in enumerate(strings):
+            groups.setdefault(self._encode_cap(max(len(s), 1)), []).append(i)
+        for cap, idxs in sorted(groups.items()):
+            for k in range(0, len(idxs), pb):
+                sel = idxs[k : k + pb]
+                chunk = [strings[i] for i in sel] + [b""] * (pb - len(sel))
+                toks, n = self.encode_batch(chunk, use_pallas=use_pallas,
+                                            max_tokens=cap, pad_len=cap)
+                for j, i in enumerate(sel):
+                    out[i] = toks[j, : n[j]]
+        return out
+
+    def warm_encode(self, use_pallas: bool = True) -> None:
+        """AOT-compile every current encode bucket shape (store open time)."""
+        for cap in list(self.encode_len_caps):
+            self.encode_batch([b""] * self.encode_pad_batch,
+                              use_pallas=use_pallas,
+                              max_tokens=cap, pad_len=cap)
+
     def encode_to_bytes(self, strings: list[bytes], use_pallas: bool = True) -> list[bytes]:
-        toks, n = self.encode_batch(strings, use_pallas=use_pallas)
-        return [toks[i, : n[i]].astype("<u2").tobytes() for i in range(len(strings))]
+        return [t.astype("<u2").tobytes()
+                for t in self.encode_bucketed(strings, use_pallas=use_pallas)]
 
     # ----------------------------------------------------------- decode
     def decode_stream(self, tokens: np.ndarray, use_pallas: bool = True,

@@ -298,6 +298,7 @@ def run(
     target_p99_s: float | None = None,
     announce: bool = True,
     metrics_port: int | None = None,
+    encode_backend: str | None = None,
 ) -> None:
     """Open the store, print the readiness line, serve until interrupted.
 
@@ -306,6 +307,10 @@ def run(
     trace dump on ``/traces``; the bound port rides the readiness line as
     ``metrics_port=``.
     """
+    # only writable opens understand the knob: a read-only replica never
+    # encodes, and CompressedStringStore.open has no such parameter
+    write_kw = ({} if read_only or encode_backend is None
+                else {"encode_backend": encode_backend})
     server = ShardServer.from_dir(
         path,
         read_only=read_only,
@@ -314,6 +319,7 @@ def run(
         max_batch=max_batch,
         max_wait_s=max_wait_s,
         target_p99_s=target_p99_s,
+        **write_kw,
     )
     metrics = (start_metrics_server(port=metrics_port, host=host)
                if metrics_port is not None else None)
@@ -357,6 +363,13 @@ def main(argv=None) -> None:
         "(0 = kernel-assigned; reported as metrics_port= on the READY line)",
     )
     ap.add_argument(
+        "--encode-backend",
+        choices=("numpy", "pallas"),
+        default=None,
+        help="tail Encoder backend for writable opens (default: whatever "
+        "the store's saved meta says; pallas needs jax on this host)",
+    )
+    ap.add_argument(
         "--target-p99-ms",
         type=float,
         default=None,
@@ -376,6 +389,7 @@ def main(argv=None) -> None:
             None if args.target_p99_ms is None else args.target_p99_ms / 1e3
         ),
         metrics_port=args.metrics_port,
+        encode_backend=args.encode_backend,
     )
 
 

@@ -63,6 +63,14 @@ def _empty_corpus() -> CompressedCorpus:
                             offsets=np.zeros(1, dtype=np.int64), raw_bytes=0)
 
 
+def _corpus_payloads(corpus: CompressedCorpus) -> list[bytes]:
+    """Per-string payload bytes via one buffer copy + slicing (cheaper than
+    n ``string_payload`` calls, each of which materialises its own array)."""
+    buf = corpus.payload.tobytes()
+    off = corpus.offsets
+    return [buf[off[i]:off[i + 1]] for i in range(corpus.n_strings)]
+
+
 class MutableStringStore(CompressedStringStore):
     """Appendable store over a frozen dictionary, with drift-triggered
     compaction.
@@ -72,9 +80,21 @@ class MutableStringStore(CompressedStringStore):
     artifact trained elsewhere, or a trained codec).
     """
 
+    #: optimistic encode attempts before extend() takes the store lock for
+    #: the whole encode+ingest; bounds the compact-race retry (a compact()
+    #: swapping the dictionary between parse and ingest invalidates the batch)
+    _MAX_ENCODE_RETRIES = 3
+
     def __init__(self, source, corpus: CompressedCorpus | None = None, *,
                  drift_threshold: float = 0.2, auto_compact: bool = False,
-                 train_ratio: float | None = None, **store_kw):
+                 train_ratio: float | None = None,
+                 encode_backend: str = "numpy", **store_kw):
+        # Refuse non-token-stream codecs up front with an append-specific
+        # error: the tail files per-string u16 token payloads
+        # (_tail_string_tokens does frombuffer("<u2")) and _tail_scan walks a
+        # dictionary that raw/block codecs don't have — appends would
+        # silently corrupt instead of failing here.
+        self._check_token_stream(source)
         # tail state must exist before super().__init__ — the overridden
         # n_strings property can be consulted during construction
         self._tail: list[bytes] = []       # compressed payload per string
@@ -85,8 +105,18 @@ class MutableStringStore(CompressedStringStore):
             corpus = _empty_corpus()
         super().__init__(source, corpus, **store_kw)
         self._n_total = self.segments.n_strings
+        if encode_backend not in ("numpy", "pallas"):
+            raise ValueError(f"unknown encode_backend {encode_backend!r} "
+                             "(one of 'numpy', 'pallas')")
+        if encode_backend == "pallas" and OnPairDevice is None:
+            raise ValueError("encode_backend='pallas' unavailable: "
+                             "jax not importable (or REPRO_NO_JAX set)")
+        self.encode_backend = encode_backend
         # frozen-dict parser; shares the compressor's already-built tables
-        self._encoder = Encoder(self.artifact, codec=self.compressor)
+        # (numpy) or the store's device tables (pallas, AOT-warmed here so
+        # the first extend() pays no compile)
+        self._encoder = self._make_encoder(self.artifact, self.compressor,
+                                           self._device)
         self._encode_lock = threading.Lock()     # serialises lazy LPM rebuild
         self._io_lock = threading.RLock()        # serialises save/swap/prune
         self._dirty = False                      # unsaved appends/compacts
@@ -98,6 +128,42 @@ class MutableStringStore(CompressedStringStore):
         self.version_id = 0          # bumped by every compact()
         self.compactions = 0
         self._dir: str | None = None  # set by save()/open(): compact() target
+
+    @staticmethod
+    def _check_token_stream(source) -> None:
+        name = getattr(source, "codec", None)          # DictArtifact
+        if name is None:
+            obj = source[1] if isinstance(source, tuple) else source
+            name = getattr(obj, "name", None)          # trained codec
+        if name is None:
+            return  # malformed source: super().__init__ gives the right error
+        try:
+            caps = registry.capabilities(name)
+        except Exception:
+            return  # unknown codec: super().__init__ gives the right error
+        if not caps.token_stream:
+            raise ValueError(
+                f"MutableStringStore requires a token-stream codec: appends "
+                f"file per-string u16 token payloads into the tail, but "
+                f"{name!r} is not token_stream (registry capability); "
+                "use a read-only CompressedStringStore for block codecs")
+
+    def _make_encoder(self, artifact, compressor, device) -> Encoder:
+        """Build (and AOT-warm) the tail encoder for the current generation.
+
+        On the pallas backend the encoder shares the store's decode device
+        when there is one (store backend jax); a numpy-store/pallas-encode
+        mix builds a device from the already-packed dictionary. compact()
+        calls this outside the lock so warm-up never blocks readers.
+        """
+        if self.encode_backend == "pallas":
+            if device is None:
+                device = OnPairDevice(compressor.dictionary)
+            enc = Encoder(artifact, backend="pallas", codec=compressor,
+                          device=device)
+            enc.warm()
+            return enc
+        return Encoder(artifact, codec=compressor)
 
     # -------------------------------------------------------------- tail hooks
     def _tail_n(self) -> int:
@@ -135,19 +201,28 @@ class MutableStringStore(CompressedStringStore):
         strings = [bytes(s) for s in strings]
         if not strings:
             return []
-        while True:
+        raw_lens = [len(s) for s in strings]
+        ids = None
+        for _ in range(self._MAX_ENCODE_RETRIES):
             with self._encode_lock:
                 version = self.version_id
                 encoder = self._encoder
                 corpus = encoder.encode(strings)
-            payloads = [corpus.string_payload(i) for i in range(len(strings))]
+            payloads = _corpus_payloads(corpus)
             with self._lock:
                 if version == self.version_id:
-                    ids = self._ingest_locked(payloads,
-                                              [len(s) for s in strings])
+                    ids = self._ingest_locked(payloads, raw_lens)
                     break
             # a compact() swapped the dictionary while we were parsing: the
             # payloads reference the OLD token table — re-parse and retry
+        if ids is None:
+            # retries exhausted (back-to-back auto_compact swaps): encode
+            # under the store lock itself. compact()'s swap needs this lock
+            # too, so the dictionary cannot change mid-parse — readers stall
+            # for one batch parse, but livelock is impossible.
+            with self._lock:
+                corpus = self._encoder.encode(strings)
+                ids = self._ingest_locked(_corpus_payloads(corpus), raw_lens)
         if self.auto_compact and self.drift.should_compact():
             self.compact()
         return ids
@@ -160,19 +235,31 @@ class MutableStringStore(CompressedStringStore):
     def _ingest_locked(self, payloads: list[bytes], raw_lens: list[int],
                        assign_ids: bool = True) -> list[int]:
         """``assign_ids=False`` re-files payloads whose ids are already
-        published (compact's delta re-parse) without touching ``_n_total``."""
+        published (compact's delta re-parse) without touching ``_n_total``.
+
+        Group-commit: payloads are filed in slices that run up to the next
+        seal boundary, with one drift observation per slice (DriftMonitor
+        explicitly accepts per-batch observation) — no per-string Python
+        loop on the hot write path.
+        """
         self._dirty = True
-        ids = []
-        for payload, raw in zip(payloads, raw_lens):
-            self._tail.append(payload)
-            self._tail_raw.append(raw)
-            self._tail_bytes += len(payload)
-            self.drift.observe(raw, len(payload))
-            if assign_ids:
-                ids.append(self._n_total)
-                self._n_total += 1
-            if len(self._tail) >= self.segments.strings_per_segment:
+        n = len(payloads)
+        ids = list(range(self._n_total, self._n_total + n)) if assign_ids else []
+        spc = self.segments.strings_per_segment
+        pos = 0
+        while pos < n:
+            take = min(n - pos, spc - len(self._tail))
+            chunk = payloads[pos : pos + take]
+            self._tail.extend(chunk)
+            self._tail_raw.extend(raw_lens[pos : pos + take])
+            comp = sum(map(len, chunk))
+            self._tail_bytes += comp
+            self.drift.observe(sum(raw_lens[pos : pos + take]), comp)
+            pos += take
+            if len(self._tail) >= spc:
                 self._seal_tail_locked()
+        if assign_ids:
+            self._n_total += n
         return ids
 
     def _seal_tail_locked(self) -> None:
@@ -237,6 +324,9 @@ class MutableStringStore(CompressedStringStore):
         new_artifact = new_comp.to_artifact()
         new_device = (OnPairDevice(new_comp.dictionary)
                       if self.backend == "jax" else None)
+        # tail encoder for the new generation — built (and, on the pallas
+        # backend, AOT-warmed) outside the lock like the device tables
+        new_encoder = self._make_encoder(new_artifact, new_comp, new_device)
 
         with self._lock:
             # strings appended while we were retraining: decode them from
@@ -245,7 +335,7 @@ class MutableStringStore(CompressedStringStore):
             # n_strings readers stay monotonic through the whole swap
             delta = self._scan_locked(n0, self._n_total)
             self._swap_state_locked(new_comp, new_corpus, new_artifact,
-                                    new_device)
+                                    new_device, new_encoder)
             if delta:
                 d_corpus = new_comp.compress(delta)
                 self._ingest_locked(
@@ -276,7 +366,7 @@ class MutableStringStore(CompressedStringStore):
 
     def _swap_state_locked(self, compressor, corpus: CompressedCorpus,
                            artifact: DictArtifact | None = None,
-                           device=None) -> None:
+                           device=None, encoder: Encoder | None = None) -> None:
         """Replace dictionary + corpus + segments in one locked step. Decoded
         values are unchanged byte-for-byte, but cached entries belong to the
         rewritten segments' old token streams — drop them all. Pass the
@@ -292,7 +382,9 @@ class MutableStringStore(CompressedStringStore):
         if self.backend == "jax":
             self._device = (device if device is not None
                             else OnPairDevice(self.dictionary))
-        self._encoder = Encoder(self.artifact, codec=self.compressor)
+        self._encoder = (encoder if encoder is not None else
+                         self._make_encoder(self.artifact, self.compressor,
+                                            self._device))
         self._dirty = True
         self._tail = []
         self._tail_raw = []
@@ -355,6 +447,7 @@ class MutableStringStore(CompressedStringStore):
             meta = self.store_meta(
                 mutable=True, n_tail=len(self._tail),
                 version_id=self.version_id,
+                encode_backend=self.encode_backend,
                 train_ratio=self.drift.baseline_ratio,
                 drift_raw_bytes=self.drift.raw_bytes,
                 drift_compressed_bytes=self.drift.compressed_bytes,
@@ -402,6 +495,9 @@ class MutableStringStore(CompressedStringStore):
         kw = {k: meta[k] for k in cls._STORE_KW}
         kw["train_ratio"] = meta.get("train_ratio")
         kw["drift_threshold"] = meta.get("drift_threshold", 0.2)
+        # saved on a jax host, reopened on a numpy-only one: fall back
+        eb = meta.get("encode_backend", "numpy")
+        kw["encode_backend"] = eb if OnPairDevice is not None else "numpy"
         kw.update(overrides)  # caller overrides beat every saved param
         store = cls(artifact, sealed, **kw)
         if n_tail:
