@@ -1,9 +1,15 @@
-"""Shared benchmark machinery: datasets, timing, measurement records."""
+"""Shared benchmark machinery: datasets, timing, measurement records, and
+run-stamping helpers (commit sha, decode backend, UTC timestamp) used by
+every emitter that writes the BENCH JSON schema."""
 
 from __future__ import annotations
 
+import importlib.util
+import os
+import subprocess
 import time
 from dataclasses import dataclass
+from datetime import datetime, timezone
 
 import numpy as np
 
@@ -11,6 +17,40 @@ from repro.core import registry
 from repro.data.synth import DATASETS, load_dataset
 
 MIB = float(1 << 20)
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def commit_sha() -> str:
+    """The sha BENCH rows are stamped with: $GITHUB_SHA in CI, ``git
+    rev-parse HEAD`` locally, ``"unknown"`` outside a checkout."""
+    sha = os.environ.get("GITHUB_SHA")
+    if sha:
+        return sha
+    # outside a git checkout (sdist / extracted tree) every failure mode —
+    # git missing, rev-parse rc=128, even a git that prints garbage — must
+    # fall back to "unknown" rather than crash the caller
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            capture_output=True, text=True, cwd=REPO, timeout=10)
+        if out.returncode != 0:
+            return "unknown"
+        return out.stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def decode_backend() -> str:
+    """Which decode backend this run exercises: ``pallas`` when jax is
+    importable and not opted out via REPRO_NO_JAX, else ``numpy``."""
+    if os.environ.get("REPRO_NO_JAX"):
+        return "numpy"
+    return "pallas" if importlib.util.find_spec("jax") else "numpy"
+
+
+def utc_timestamp() -> str:
+    """ISO-8601 UTC second-resolution timestamp for BENCH rows."""
+    return datetime.now(timezone.utc).isoformat(timespec="seconds")
 
 
 @dataclass

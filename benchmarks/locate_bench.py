@@ -1,0 +1,89 @@
+"""Reverse-lookup benchmark: locate + scan_prefix across deployment shapes.
+
+Measures the queryable-dictionary surface on the same sharded directory
+served three ways — directly (in-process :class:`CompressedStringStore`),
+through ``connect("shard://<dir>")``, and through ``connect("tcp://...")``
+against spawned shard-server processes:
+
+* ``locate-hit``  — batched exact-match lookups of stored strings (encode
+  the query once, probe the per-segment fingerprint tables);
+* ``locate-miss`` — the same batches perturbed past any match (the miss
+  path still pays the encode + per-segment probes);
+* ``scan-prefix`` — short-prefix scans through the sorted sidecars,
+  ``limit`` hits per query.
+
+Child processes run with ``REPRO_NO_JAX=1``; the first locate on each
+backend is a warmup so lazy index construction stays out of the window.
+"""
+
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import dataset
+from benchmarks.rpc_bench import _spawn_servers, _time_batches
+from repro.client import connect, format_tcp_url
+from repro.core.metrics import latency_summary
+from repro.distributed import save_sharded
+from repro.store import CompressedStringStore
+
+
+def locate_bench(size_mib: int, n_queries: int = 3000, batch: int = 256,
+                 n_shards: int = 3, prefix_len: int = 4, limit: int = 64,
+                 seed: int = 0,
+                 dataset_name: str = "book_titles") -> list[dict]:
+    strings = dataset(dataset_name, size_mib << 20)
+    store = CompressedStringStore.build(
+        strings, sample_bytes=min(size_mib, 4) << 20, seed=seed)
+    dir_path = tempfile.mkdtemp(prefix="locate_bench_")
+    rows: list[dict] = []
+    try:
+        save_sharded(store, dir_path, n_shards)
+        rng = np.random.default_rng(seed)
+        ids = rng.integers(0, len(strings), n_queries).tolist()
+        hits = [strings[i] for i in ids]
+        misses = [s + b"\x00@@miss@@" for s in hits]
+        prefixes = [strings[i][:prefix_len] for i in ids[:n_queries // 4]]
+        hit_batches = [hits[k:k + batch] for k in range(0, len(hits), batch)]
+        miss_batches = [misses[k:k + batch]
+                        for k in range(0, len(misses), batch)]
+
+        def row(op: str, transport: str, n: int, lat_s: list[float],
+                per: str) -> dict:
+            lat = latency_summary(lat_s)
+            total_s = sum(lat_s)
+            return {"dataset": dataset_name, "op": op, "transport": transport,
+                    "n": n, "n_shards": n_shards, "latency_per": per,
+                    "p50_us": round(lat["p50_us"], 2),
+                    "p99_us": round(lat["p99_us"], 2),
+                    "lookups_per_s": round(n / max(total_s, 1e-9), 1),
+                    "total_s": round(total_s, 4)}
+
+        def measure(transport: str, locate_batch, scan_prefix) -> None:
+            locate_batch(hits[:batch])  # warmup: builds the lazy indexes
+            lat = _time_batches(locate_batch, hit_batches)
+            rows.append(row("locate-hit", transport, n_queries, lat, "batch"))
+            lat = _time_batches(locate_batch, miss_batches)
+            rows.append(row("locate-miss", transport, n_queries, lat,
+                            "batch"))
+            lat = _time_batches(lambda p: scan_prefix(p, limit), prefixes)
+            rows.append(row("scan-prefix", transport, len(prefixes), lat,
+                            "query"))
+
+        measure("store", store.locate_batch, store.scan_prefix)
+        with connect(f"shard://{dir_path}") as client:
+            measure("shard", client.locate_batch, client.scan_prefix)
+        procs, addrs = _spawn_servers(dir_path, n_shards)
+        try:
+            with connect(format_tcp_url(addrs)) as client:
+                measure("tcp", client.locate_batch, client.scan_prefix)
+        finally:
+            for p in procs:
+                p.terminate()
+    finally:
+        shutil.rmtree(dir_path, ignore_errors=True)
+    return rows

@@ -182,6 +182,19 @@ def bench_client(size_mib: int) -> None:
               f"p99_us={r['p99_us']};per={r['latency_per']}")
 
 
+def bench_locate(size_mib: int) -> None:
+    """Reverse lookup: locate hit/miss + scan_prefix over the store
+    directly, shard:// and tcp://."""
+    from benchmarks.locate_bench import locate_bench
+    rows = locate_bench(size_mib)
+    _dump("locate", rows)
+    for r in rows:
+        us = r["total_s"] / max(1, r["n"]) * 1e6
+        _emit(f"locate/{r['op']}/{r['transport']}", us,
+              f"lookups_s={r['lookups_per_s']};p50_us={r['p50_us']};"
+              f"p99_us={r['p99_us']};per={r['latency_per']}")
+
+
 def bench_loadgen(size_mib: int) -> None:
     """SLO-gated load harness: closed + open loop against a spawned
     2-shard cluster; derived carries the server-side percentiles."""
@@ -236,6 +249,7 @@ ALL = {
     "persist": bench_persist,
     "rpc": bench_rpc,
     "client": bench_client,
+    "locate": bench_locate,
     "loadgen": bench_loadgen,
     "roofline": bench_roofline,
 }

@@ -18,16 +18,23 @@ halved for hardware headroom; the 5x band absorbs CI-runner noise on top).
 from __future__ import annotations
 
 import argparse
-import importlib.util
 import json
 import os
 import subprocess
 import sys
-from datetime import datetime, timezone
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, REPO)  # `python benchmarks/smoke.py` -> benchmarks pkg
+sys.path.insert(0, os.path.join(REPO, "src"))  # repro importable sans PYTHONPATH
+
+from benchmarks.common import (  # noqa: E402
+    commit_sha,
+    decode_backend,
+    utc_timestamp,
+)
+
 BASELINE = os.path.join(REPO, "results", "bench", "baseline.json")
-SMOKE_BENCHES = "store,ingest,persist,rpc,client,loadgen"
+SMOKE_BENCHES = "store,ingest,persist,rpc,client,locate,loadgen"
 
 #: derived-CSV keys worth tracking, and their units ("1/s" and "MiB/s" are
 #: rates — higher is better; "us" is a latency — lower is better)
@@ -45,36 +52,6 @@ RATE_KEYS = {
     "server_p50_us": "us",
     "server_p99_us": "us",
 }
-
-
-def _commit() -> str:
-    sha = os.environ.get("GITHUB_SHA")
-    if sha:
-        return sha
-    # outside a git checkout (sdist / extracted tree) every failure mode —
-    # git missing, rev-parse rc=128, even a git that prints garbage — must
-    # fall back to "unknown" rather than crash the smoke run
-    try:
-        out = subprocess.run(
-            ["git", "rev-parse", "HEAD"],
-            capture_output=True,
-            text=True,
-            cwd=REPO,
-            timeout=10,
-        )
-        if out.returncode != 0:
-            return "unknown"
-        return out.stdout.strip() or "unknown"
-    except (OSError, subprocess.SubprocessError):
-        return "unknown"
-
-
-def _backend() -> str:
-    """Which decode backend this run exercises: ``pallas`` when jax is
-    importable and not opted out via REPRO_NO_JAX, else ``numpy``."""
-    if os.environ.get("REPRO_NO_JAX"):
-        return "numpy"
-    return "pallas" if importlib.util.find_spec("jax") else "numpy"
 
 
 def run_benchmarks(only: str, quick: bool = True) -> list[str]:
@@ -102,7 +79,7 @@ def rows_from_csv(lines: list[str], commit: str, backend: str = "numpy",
     with the decode ``backend`` and an ISO-8601 UTC ``timestamp`` so runs
     from different hosts/configs stay attributable after aggregation."""
     if timestamp is None:
-        timestamp = datetime.now(timezone.utc).isoformat(timespec="seconds")
+        timestamp = utc_timestamp()
     rows: list[dict] = []
     for line in lines:
         name, us, derived = line.split(",", 2)
@@ -186,6 +163,7 @@ BASELINE_METRICS = {
     "rpc/extend-512/rpc/strings_s": None,
     "rpc/append-pipelined/rpc/strings_s": None,
     "client/multiget/shard/lookups_s": None,
+    "locate/locate-hit/store/lookups_s": None,
     "loadgen/closed/rpc/ops_s": None,
     "loadgen/closed/rpc/server_p99_us": 10.0,
 }
@@ -208,8 +186,8 @@ def main() -> None:
 
     rows = rows_from_csv(
         run_benchmarks(args.only, quick=not args.full_size),
-        _commit(),
-        backend=_backend(),
+        commit_sha(),
+        backend=decode_backend(),
     )
     with open(args.out, "w") as f:
         json.dump(rows, f, indent=1)

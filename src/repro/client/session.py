@@ -5,10 +5,12 @@ backend — a local :class:`CompressedStringStore` / `MutableStringStore`, an
 in-process :class:`ShardedStringStore`, or a multi-process
 :class:`DistributedStringStore` — and wraps it in a :class:`StoreClient`
 with a *frozen* surface: the same sync calls
-(``get/multiget/scan/append/extend/stats/compact/save/close``), the same
-async counterparts returning ``concurrent.futures.Future``
-(``get_async/multiget_async/append_async/extend_async``), the same
-streaming ``scan_iter``, and the same per-call options (``timeout=``,
+(``get/multiget/scan/locate/scan_prefix/append/extend/stats/compact/save/
+close``), the same async counterparts returning
+``concurrent.futures.Future``
+(``get_async/multiget_async/locate_async/append_async/extend_async``), the
+same streaming ``scan_iter`` / ``scan_prefix_iter``, and the same
+per-call options (``timeout=``,
 ``read_preference="primary"|"replica"|"any"``) no matter which deployment
 shape sits behind it. New backends land behind this surface once, not once
 per call site.
@@ -586,6 +588,116 @@ class StoreClient:
             for c_lo in range(lo, hi, step):
                 yield from self.scan(c_lo, min(c_lo + step, hi),
                                      read_preference=read_preference)
+        return _gen()
+
+    # --------------------------------------------------------- reverse lookup
+    def _inline_future(self, call) -> Future:
+        """Complete ``call()`` synchronously behind a Future — the async
+        surface for ops with no service/executor pipeline on this backend."""
+        fut: Future = Future()
+        fut.set_running_or_notify_cancel()
+        try:
+            fut.set_result(call())
+        except Exception as exc:
+            fut.set_exception(exc)
+        return fut
+
+    def _locate_call(self, strings: list[bytes], pref: str):
+        # plain stores take no read_preference; routers route on it
+        if self._is_router:
+            return self.backend.locate_batch(strings, read_preference=pref)
+        return self.backend.locate_batch(strings)
+
+    def locate_batch_async(self, strings, *,
+                           read_preference: str | None = None
+                           ) -> "Future[list[int | None]]":
+        self._check_open()
+        pref = self._pref(read_preference)
+        t0 = time.perf_counter()
+        strings = [bytes(s) for s in strings]
+        if self._executor is not None:
+            fut, ctx, pid = self._trace_submit(
+                lambda: self._submit(self._locate_call, strings, pref))
+        else:  # local backends: the store call is the whole pipeline
+            fut, ctx, pid = self._trace_submit(
+                lambda: self._inline_future(
+                    lambda: self._locate_call(strings, pref)))
+        return self._tracked(fut, "locate", t0, lambda _out: 0, ctx, pid)
+
+    def locate_async(self, s, *, read_preference: str | None = None
+                     ) -> "Future[int | None]":
+        inner = self.locate_batch_async([s], read_preference=read_preference)
+        out: Future = Future()
+
+        def _done(f: Future) -> None:
+            if f.cancelled():
+                out.cancel()
+            elif f.exception() is not None:
+                out.set_exception(f.exception())
+            else:
+                out.set_result(f.result()[0])
+        inner.add_done_callback(_done)
+        return out
+
+    def locate_batch(self, strings, *, timeout: float | None = None,
+                     read_preference: str | None = None
+                     ) -> list[int | None]:
+        """Exact-match reverse lookup: the id of each stored string, or
+        ``None`` for strings not in the store (lowest id wins on
+        duplicates)."""
+        if timeout is None:
+            strings = [bytes(s) for s in strings]
+            pref = self._pref(read_preference)
+            return self._direct("locate",
+                                lambda: self._locate_call(strings, pref),
+                                lambda _out: 0)
+        return self.locate_batch_async(
+            strings, read_preference=read_preference).result(timeout)
+
+    def locate(self, s, *, timeout: float | None = None,
+               read_preference: str | None = None) -> int | None:
+        return self.locate_batch([s], timeout=timeout,
+                                 read_preference=read_preference)[0]
+
+    def scan_prefix(self, prefix, limit: int | None = 100, after=None, *,
+                    read_preference: str | None = None
+                    ) -> list[tuple[int, bytes]]:
+        """All stored strings starting with ``prefix`` as ``(id, string)``
+        pairs in (string, id) order, at most ``limit`` of them; pass the
+        last hit back as ``after=(string, id)`` to page (or use
+        :meth:`scan_prefix_iter`)."""
+        self._check_open()
+        prefix = bytes(prefix)
+        pref = self._pref(read_preference)
+        if self._is_router:
+            call = (lambda: self.backend.scan_prefix(
+                prefix, limit, after, read_preference=pref))
+        else:
+            call = lambda: self.backend.scan_prefix(prefix, limit, after)
+        return self._direct(
+            "scan_prefix", call,
+            lambda out: sum(len(s) for _gid, s in out))
+
+    def scan_prefix_iter(self, prefix, *, chunk: int | None = None,
+                         read_preference: str | None = None):
+        """Stream every prefix hit as an iterator of ``(id, string)``
+        pairs, fetched ``chunk`` hits at a time (default 256) via the
+        ``after=`` cursor — no response ever covers more than one chunk."""
+        self._check_open()
+        self._pref(read_preference)  # fail a typo now, not at first chunk
+        prefix = bytes(prefix)
+        step = int(chunk) if chunk else 256
+
+        def _gen():
+            after = None
+            while True:
+                page = self.scan_prefix(prefix, limit=step, after=after,
+                                        read_preference=read_preference)
+                yield from page
+                if len(page) < step:
+                    return
+                gid, s = page[-1]
+                after = (s, gid)
         return _gen()
 
     # ----------------------------------------------------------------- writes

@@ -23,9 +23,11 @@ Pure numpy — no jax required on either the writer or the reader host.
 
 from __future__ import annotations
 
+import heapq
 import json
 import os
 import threading
+from itertools import islice
 
 from repro.core import registry
 from repro.core.artifact import DictArtifact
@@ -222,6 +224,20 @@ class ShardRouter:
     def _shard_stats(self, k: int) -> dict:
         raise NotImplementedError
 
+    def _shard_locate(self, k: int, strings: list[bytes],
+                      read_preference: str | None = None
+                      ) -> list[int | None]:
+        """Shard-local ids of ``strings`` (None per miss)."""
+        raise NotImplementedError
+
+    def _shard_scan_prefix(self, k: int, prefix: bytes, limit: int | None,
+                           after: tuple[bytes, int] | None,
+                           read_preference: str | None = None
+                           ) -> list[tuple[int, bytes]]:
+        """Shard-local ``[(local_id, string), ...]`` prefix matches in
+        (string, local_id) order; ``after`` is a shard-local cursor."""
+        raise NotImplementedError
+
     def _tail_extend(self, strings: list[bytes]) -> tuple[list[int], int]:
         """Append to the tail shard; returns (local ids, new local count)."""
         raise NotImplementedError
@@ -281,6 +297,61 @@ class ShardRouter:
                 out.extend(self._shard_scan(k, a - s_lo, b - s_lo,
                                             read_preference))
         return out
+
+    def locate(self, s: bytes, *,
+               read_preference: str | None = None) -> int | None:
+        """Exact-match reverse lookup across every shard (lowest id wins)."""
+        return self.locate_batch([s], read_preference=read_preference)[0]
+
+    def locate_batch(self, strings, *,
+                     read_preference: str | None = None) -> list[int | None]:
+        """Batched reverse lookup. Shards are probed in id order and each
+        query drops out at its first hit — shard order IS gid order
+        (bounds are contiguous), so the first hit is the lowest global id
+        and fully-resolved batches skip the remaining shards."""
+        strings = [bytes(s) for s in strings]
+        out: list[int | None] = [None] * len(strings)
+        pending = list(range(len(strings)))
+        for k, (lo, hi) in enumerate(self.bounds):
+            if not pending:
+                break
+            if hi <= lo:
+                continue
+            got = self._shard_locate(k, [strings[p] for p in pending],
+                                     read_preference)
+            still: list[int] = []
+            for p, loc in zip(pending, got):
+                if loc is None:
+                    still.append(p)
+                else:
+                    out[p] = lo + loc
+            pending = still
+        return out
+
+    def scan_prefix(self, prefix: bytes, limit: int | None = 100,
+                    after: tuple[bytes, int] | None = None, *,
+                    read_preference: str | None = None
+                    ) -> list[tuple[int, bytes]]:
+        """Prefix enumeration across every shard, order-merged into global
+        ``(string, id)`` order. Each shard returns at most ``limit`` hits
+        (any more could never survive the merge); the shard-local cursor
+        subtracts the shard's base, which preserves the (string, id)
+        ordering the per-segment binary search needs."""
+        prefix = bytes(prefix)
+        runs: list[list[tuple[bytes, int]]] = []
+        for k, (lo, hi) in enumerate(self.bounds):
+            if hi <= lo:
+                continue
+            sh_after = ((after[0], after[1] - lo)
+                        if after is not None else None)
+            hits = self._shard_scan_prefix(k, prefix, limit, sh_after,
+                                           read_preference)
+            if hits:
+                runs.append([(s, lo + local) for local, s in hits])
+        merged = heapq.merge(*runs)
+        if limit is not None:
+            merged = islice(merged, limit)
+        return [(gid, s) for s, gid in merged]
 
     def stats_snapshot(self) -> dict:
         """Aggregate per-shard stats under global routing metadata."""
@@ -367,6 +438,18 @@ class ShardedStringStore(ShardRouter):
 
     def _shard_stats(self, k: int) -> dict:
         return self.stores[k].stats_snapshot()
+
+    def _shard_locate(self, k: int, strings: list[bytes],
+                      read_preference: str | None = None
+                      ) -> list[int | None]:
+        return self.stores[k].locate_batch(strings)
+
+    def _shard_scan_prefix(self, k: int, prefix: bytes, limit: int | None,
+                           after: tuple[bytes, int] | None,
+                           read_preference: str | None = None
+                           ) -> list[tuple[int, bytes]]:
+        # a shard store's global ids ARE shard-local ids
+        return self.stores[k].scan_prefix(prefix, limit, after)
 
     def _writable_tail_store(self):
         store = self.stores[-1]

@@ -75,9 +75,13 @@ class _Run:
     """Shared completion bookkeeping for both loops (thread-safe: client
     completion callbacks fire on pool/IO threads)."""
 
-    def __init__(self, spec: WorkloadSpec, client):
+    def __init__(self, spec: WorkloadSpec, client,
+                 queries: dict[int, bytes] | None = None):
         self.spec = spec
         self.client = client
+        #: id -> stored string, prefetched before timing starts so locate /
+        #: scan_prefix ops don't pay a read on the measured path
+        self.queries = queries or {}
         self.hist = Histogram("loadgen_observed_latency_us")
         self.lock = threading.Lock()
         self.per_kind: dict[str, int] = {}
@@ -88,11 +92,12 @@ class _Run:
         self.outstanding = 0
         self.drained = threading.Condition(self.lock)
         self._payload_rng = np.random.default_rng(spec.seed + 1)
-        # scans are sync on the client; a small side pool keeps them from
-        # stalling the issue loop without turning into thread-per-op
+        # scans/prefix scans are sync on the client; a small side pool keeps
+        # them from stalling the issue loop without thread-per-op
         self._scan_pool = (
             ThreadPoolExecutor(max_workers=4, thread_name_prefix="lg-scan")
-            if spec.mix.get("scan", 0) > 0 else None)
+            if (spec.mix.get("scan", 0) > 0
+                or spec.mix.get("scan_prefix", 0) > 0) else None)
 
     # ------------------------------------------------------------------ issue
     def issue(self, op: Op, t_ref: float, on_done=None) -> None:
@@ -122,6 +127,16 @@ class _Run:
             elif op.kind == "scan":
                 lo, hi = op.ids
                 fut = self._scan_pool.submit(client.scan, lo, hi)
+            elif op.kind == "locate":
+                s = self.queries[op.ids[0]]
+                if op.n_payload:  # scheduled miss: perturb past any match
+                    s = s + b"\x00@@miss@@"
+                fut = client.locate_async(
+                    s, read_preference=spec.read_preference)
+            elif op.kind == "scan_prefix":
+                prefix = self.queries[op.ids[0]][:spec.prefix_len]
+                fut = self._scan_pool.submit(
+                    client.scan_prefix, prefix, spec.prefix_limit)
             elif op.kind == "append":
                 fut = client.append_async(
                     payload_strings(spec, self._payload_rng, 1)[0])
@@ -142,6 +157,8 @@ class _Run:
             res = fut.result()
             nbytes = (len(res) if isinstance(res, (bytes, bytearray))
                       else sum(len(v) for v in res))
+        elif exc is None and fut is not None and op.kind == "scan_prefix":
+            nbytes = sum(len(s) for _gid, s in fut.result())
         with self.lock:
             self.outstanding -= 1
             if exc is None:
@@ -229,7 +246,12 @@ def run_workload(client, spec: WorkloadSpec, duration_s: float,
         schedule = build_schedule(spec, max(1, client.n_strings), n)
     if not schedule:
         raise ValueError("empty schedule")
-    run = _Run(spec, client)
+    # prefetch locate / scan_prefix query strings outside the measured
+    # window — the measured op is the reverse lookup, not the read
+    qids = sorted({op.ids[0] for op in schedule
+                   if op.kind in ("locate", "scan_prefix")})
+    queries = dict(zip(qids, client.multiget(qids))) if qids else None
+    run = _Run(spec, client, queries)
     if spec.loop == "open":
         return _run_open(run, schedule, duration_s)
     return _run_closed(run, schedule, duration_s)

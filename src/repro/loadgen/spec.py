@@ -20,7 +20,8 @@ from typing import NamedTuple
 
 import numpy as np
 
-OP_KINDS = ("get", "multiget", "scan", "append", "extend")
+OP_KINDS = ("get", "multiget", "scan", "locate", "scan_prefix", "append",
+            "extend")
 LOOPS = ("closed", "open")
 DISTRIBUTIONS = ("zipf", "uniform", "sequential")
 
@@ -74,6 +75,11 @@ class WorkloadSpec:
     zipf_s: float = 1.1           # zipf exponent (>1); ignored otherwise
     multiget_fanout: int = 16
     scan_span: int = 256
+    #: reverse-lookup ops: prefix length for scan_prefix queries, per-query
+    #: hit cap, and the fraction of locate ops aimed at absent strings
+    prefix_len: int = 4
+    prefix_limit: int = 64
+    locate_miss_fraction: float = 0.1
     append_bytes: int = 64        # synthetic payload size per written string
     extend_batch: int = 32
     read_preference: str | None = None
@@ -170,17 +176,26 @@ def build_schedule(spec: WorkloadSpec, n_strings: int,
     else:
         arrivals = np.zeros(n_ops)
 
+    # locate miss flags, drawn only when the mix asks for locate so specs
+    # predating reverse lookup keep byte-identical schedules
+    miss = np.empty(0, dtype=bool)
+    if "locate" in kinds:
+        n_locate = int(np.sum(chosen == kinds.index("locate")))
+        miss = rng.random(n_locate) < float(spec.locate_miss_fraction)
+
     # reads vastly outnumber writes; draw one popularity pool and slice it
     fanout = max(1, int(spec.multiget_fanout))
     need = int(np.sum(chosen == kinds.index("get")) if "get" in kinds else 0)
     if "multiget" in kinds:
         need += fanout * int(np.sum(chosen == kinds.index("multiget")))
-    if "scan" in kinds:
-        need += int(np.sum(chosen == kinds.index("scan")))
+    for k in ("scan", "locate", "scan_prefix"):
+        if k in kinds:
+            need += int(np.sum(chosen == kinds.index(k)))
     pool = _popularity_ids(spec, rng, n_strings, need)
 
     schedule: list[Op] = []
     cursor = 0
+    mcursor = 0
     span = max(1, int(spec.scan_span))
     for i, ki in enumerate(chosen):
         kind = kinds[ki]
@@ -196,6 +211,16 @@ def build_schedule(spec: WorkloadSpec, n_strings: int,
             lo = int(pool[cursor]) % max(1, n_strings - span)
             cursor += 1
             schedule.append(Op(at, kind, (lo, lo + span), 0))
+        elif kind == "locate":
+            # ids = the stored string the driver queries with; n_payload=1
+            # flags a deliberate miss (driver perturbs the query string)
+            schedule.append(Op(at, kind, (int(pool[cursor]),),
+                               1 if miss[mcursor] else 0))
+            cursor += 1
+            mcursor += 1
+        elif kind == "scan_prefix":
+            schedule.append(Op(at, kind, (int(pool[cursor]),), 0))
+            cursor += 1
         elif kind == "append":
             schedule.append(Op(at, kind, (), 1))
         else:  # extend

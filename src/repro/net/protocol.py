@@ -56,8 +56,11 @@ TRACE_CTX_BYTES = _TRACE_CTX.size
 #: server echoes it back byte-for-byte, a trace-aware server replies with a
 #: capability JSON — the difference IS the negotiation.
 CAPS_PROBE = b"\x00REPRO-CAPS\x00"
-#: capabilities a trace-aware server answers the probe with
-SERVER_CAPS = {"trace": True, "trace_version": TRACED_VERSION}
+#: capabilities a trace-aware server answers the probe with; ``locate``
+#: advertises the reverse-lookup ops (OP_LOCATE / OP_SCAN_PREFIX) so a
+#: new client falls back to scan-side filtering against an old server
+#: instead of tripping its unknown-op error path on every call
+SERVER_CAPS = {"trace": True, "trace_version": TRACED_VERSION, "locate": True}
 
 #: refuse frames above this size unless the caller raises the limit
 DEFAULT_MAX_FRAME = 64 << 20
@@ -73,6 +76,8 @@ OP_STATS = 0x07
 OP_COMPACT = 0x08
 OP_SAVE = 0x09
 OP_TRACE_DUMP = 0x0A
+OP_LOCATE = 0x0B
+OP_SCAN_PREFIX = 0x0C
 
 # response statuses
 ST_OK = 0x40
@@ -89,6 +94,8 @@ OP_NAMES = {
     OP_COMPACT: "compact",
     OP_SAVE: "save",
     OP_TRACE_DUMP: "trace_dump",
+    OP_LOCATE: "locate",
+    OP_SCAN_PREFIX: "scan_prefix",
 }
 
 
@@ -285,6 +292,51 @@ def unpack_bytes_list(payload: bytes) -> list[bytes]:
             f"bytes-list blob holds {len(blob)} bytes, offsets claim {int(offsets[-1])}"
         )
     return [bytes(blob[int(offsets[k]) : int(offsets[k + 1])]) for k in range(n)]
+
+
+def pack_prefix_query(prefix: bytes, limit: int | None,
+                      after: tuple[bytes, int] | None = None) -> bytes:
+    """OP_SCAN_PREFIX request: prefix + limit (+ optional resume cursor).
+
+    All pieces ride in one nested bytes-list so arbitrary (non-utf8)
+    prefixes and cursor strings survive the wire; ``limit=None`` encodes
+    as -1.
+    """
+    parts = [prefix, pack_ids([-1 if limit is None else int(limit)])]
+    if after is not None:
+        parts += [after[0], pack_ids([int(after[1])])]
+    return pack_bytes_list(parts)
+
+
+def unpack_prefix_query(
+    payload: bytes,
+) -> tuple[bytes, int | None, tuple[bytes, int] | None]:
+    parts = unpack_bytes_list(payload)
+    if len(parts) not in (2, 4):
+        raise ProtocolError(
+            f"prefix query holds {len(parts)} parts, expected 2 or 4"
+        )
+    limit = unpack_ids(parts[1])[0]
+    after = (parts[2], unpack_ids(parts[3])[0]) if len(parts) == 4 else None
+    return parts[0], (None if limit < 0 else limit), after
+
+
+def pack_prefix_hits(hits: list[tuple[int, bytes]]) -> bytes:
+    """OP_SCAN_PREFIX response: parallel id vector + string batch."""
+    return pack_bytes_list([
+        pack_ids([gid for gid, _ in hits]),
+        pack_bytes_list([s for _, s in hits]),
+    ])
+
+
+def unpack_prefix_hits(payload: bytes) -> list[tuple[int, bytes]]:
+    ids_raw, strings_raw = unpack_bytes_list(payload)
+    ids, strings = unpack_ids(ids_raw), unpack_bytes_list(strings_raw)
+    if len(ids) != len(strings):
+        raise ProtocolError(
+            f"prefix hits hold {len(ids)} ids but {len(strings)} strings"
+        )
+    return list(zip(ids, strings))
 
 
 def pack_json(obj) -> bytes:

@@ -59,7 +59,7 @@ from repro.store.store import write_json_atomic
 #: slow-but-alive server, so blind resends would duplicate work
 _IDEMPOTENT_OPS = frozenset(
     {P.OP_PING, P.OP_GET, P.OP_MULTIGET, P.OP_SCAN, P.OP_STATS,
-     P.OP_TRACE_DUMP}
+     P.OP_TRACE_DUMP, P.OP_LOCATE, P.OP_SCAN_PREFIX}
 )
 
 
@@ -97,6 +97,9 @@ class RemoteShardClient:
         #: resolved lazily by a CAPS_PROBE ping the first time a traced
         #: request goes out, so old servers are never sent v2 frames
         self._traced: bool | None = None
+        #: full capability dict from the probe ({} for an old echo-only
+        #: server, None until a probe has run)
+        self._caps: dict | None = None
 
     # ------------------------------------------------------------ connections
     def _connect(self) -> socket.socket:
@@ -146,8 +149,18 @@ class RemoteShardClient:
                 caps = P.unpack_json(resp)
             except Exception:
                 caps = None
+        self._caps = caps if isinstance(caps, dict) else {}
         self._traced = bool(caps) and bool(caps.get("trace"))
         return self._traced
+
+    @property
+    def supports_locate(self) -> bool:
+        """Does the server answer OP_LOCATE / OP_SCAN_PREFIX? Resolved by
+        the same one-shot CAPS_PROBE as trace support; an old server's echo
+        resolves to False and callers fall back to scan-side filtering."""
+        if self._caps is None:
+            self._probe_caps()
+        return bool(self._caps and self._caps.get("locate"))
 
     def _call(self, op: int, payload: bytes = b"", timeout: float = -1.0) -> bytes:
         """One request/response exchange, traced when a request trace is
@@ -239,6 +252,25 @@ class RemoteShardClient:
 
     def scan(self, lo: int, hi: int) -> list[bytes]:
         return P.unpack_bytes_list(self._call(P.OP_SCAN, P.pack_ids([lo, hi])))
+
+    def locate_batch(self, strings) -> list[int | None]:
+        """Shard-local ids of ``strings``; misses travel as -1 on the wire
+        and come back as None."""
+        resp = self._call(
+            P.OP_LOCATE, P.pack_bytes_list([bytes(s) for s in strings])
+        )
+        return [None if gid < 0 else gid for gid in P.unpack_ids(resp)]
+
+    def scan_prefix(
+        self,
+        prefix: bytes,
+        limit: int | None = 100,
+        after: tuple[bytes, int] | None = None,
+    ) -> list[tuple[int, bytes]]:
+        resp = self._call(
+            P.OP_SCAN_PREFIX, P.pack_prefix_query(bytes(prefix), limit, after)
+        )
+        return P.unpack_prefix_hits(resp)
 
     def append(self, s: bytes) -> int:
         return P.unpack_ids(self._call(P.OP_APPEND, bytes(s)))[0]
@@ -445,6 +477,74 @@ class DistributedStringStore(ShardRouter):
 
     def _shard_stats(self, k: int) -> dict:
         return self.clients[k].stats()
+
+    def _shard_locate(
+        self, k: int, strings: list[bytes], read_preference: str | None = None
+    ) -> list[int | None]:
+        """Reverse lookup on shard ``k``. A locate can match ANY id in the
+        shard, so only replicas covering the whole shard are eligible (the
+        generational staleness guard with max_local = shard size - 1).
+        Servers predating OP_LOCATE fall back to a scan-side compare."""
+        lo, hi = self.bounds[k]
+        client = self._read_client(k, hi - lo - 1, read_preference)
+        if client.supports_locate:
+            return client.locate_batch(strings)
+        return self._scan_locate_fallback(k, strings, read_preference)
+
+    def _scan_locate_fallback(
+        self, k: int, strings: list[bytes], read_preference: str | None
+    ) -> list[int | None]:
+        """Old-server interop: stream the shard in scan chunks and compare
+        raw strings client-side. First (lowest) local id wins, matching the
+        index semantics; stops as soon as every query has resolved."""
+        want: dict[bytes, list[int]] = {}
+        for pos, s in enumerate(strings):
+            want.setdefault(s, []).append(pos)
+        out: list[int | None] = [None] * len(strings)
+        unresolved = len(want)
+        lo, hi = self.bounds[k]
+        for c_lo in range(0, hi - lo, self.scan_chunk):
+            if not unresolved:
+                break
+            c_hi = min(c_lo + self.scan_chunk, hi - lo)
+            chunk = self._shard_scan(k, c_lo, c_hi, read_preference)
+            for off, s in enumerate(chunk):
+                positions = want.get(s)
+                if positions is None or out[positions[0]] is not None:
+                    continue
+                for pos in positions:
+                    out[pos] = c_lo + off
+                unresolved -= 1
+        return out
+
+    def _shard_scan_prefix(
+        self,
+        k: int,
+        prefix: bytes,
+        limit: int | None,
+        after: tuple[bytes, int] | None,
+        read_preference: str | None = None,
+    ) -> list[tuple[int, bytes]]:
+        lo, hi = self.bounds[k]
+        client = self._read_client(k, hi - lo - 1, read_preference)
+        if client.supports_locate:
+            return client.scan_prefix(prefix, limit, after)
+        # old-server interop: stream the shard and filter client-side
+        hits: list[tuple[bytes, int]] = []
+        for c_lo in range(0, hi - lo, self.scan_chunk):
+            c_hi = min(c_lo + self.scan_chunk, hi - lo)
+            chunk = self._shard_scan(k, c_lo, c_hi, read_preference)
+            for off, s in enumerate(chunk):
+                local = c_lo + off
+                if not s.startswith(prefix):
+                    continue
+                if after is not None and (s, local) <= after:
+                    continue
+                hits.append((s, local))
+        hits.sort()
+        if limit is not None:
+            hits = hits[:limit]
+        return [(local, s) for s, local in hits]
 
     def _fanout_multiget(
         self,

@@ -257,6 +257,14 @@ class ShardServer:
                 # states for client-side cross-shard aggregation
                 stats["metrics"] = REGISTRY.snapshot()
             return P.pack_json(stats)
+        if kind == P.OP_LOCATE:
+            strings = P.unpack_bytes_list(payload)
+            found = self.store.locate_batch(strings)
+            # None has no <i8 encoding: misses travel as -1
+            return P.pack_ids([-1 if gid is None else gid for gid in found])
+        if kind == P.OP_SCAN_PREFIX:
+            prefix, limit, after = P.unpack_prefix_query(payload)
+            return P.pack_prefix_hits(self.store.scan_prefix(prefix, limit, after))
         if kind == P.OP_TRACE_DUMP:
             n = (P.unpack_json(payload) or {}).get("n", 16) if payload else 16
             return P.pack_json(TRACER.trace_dump(n))

@@ -46,6 +46,7 @@ from repro.core import registry
 from repro.core.api import CompressedCorpus
 from repro.core.artifact import DictArtifact
 from repro.core.codec import Encoder
+from repro.core.index import SegmentIndex
 from repro.store.drift import DriftMonitor
 from repro.store.segment import SegmentedCorpus
 from repro.store.store import CompressedStringStore, write_json_atomic
@@ -101,6 +102,11 @@ class MutableStringStore(CompressedStringStore):
         self._tail_raw: list[int] = []     # decoded byte length per string
         self._tail_bytes = 0
         self._n_total = 0
+        # reverse-lookup tail map: compressed payload -> lowest tail-local
+        # id. None until the first tail locate builds it; _ingest_locked
+        # then maintains it incrementally so the write path pays nothing
+        # before anyone queries.
+        self._tail_map: dict[bytes, int] | None = None
         if corpus is None:
             corpus = _empty_corpus()
         super().__init__(source, corpus, **store_kw)
@@ -184,11 +190,49 @@ class MutableStringStore(CompressedStringStore):
         decoded = self.dictionary.decode_tokens(tokens)
         return self._split_decoded(decoded, tokens, counts)
 
+    def _tail_locate(self, payload: bytes) -> int | None:
+        if self._tail_map is None:
+            # first tail locate: build the map once; ingest maintains it
+            # from here on
+            m: dict[bytes, int] = {}
+            for local, p in enumerate(self._tail):
+                m.setdefault(p, local)
+            self._tail_map = m
+        return self._tail_map.get(payload)
+
+    def _tail_prefix_hits(self, prefix, after):
+        n = len(self._tail)
+        if n == 0:
+            return []
+        sealed = self.segments.n_strings
+        hits = []
+        for local, s in enumerate(self._tail_scan(0, n)):
+            if not s.startswith(prefix):
+                continue
+            gid = sealed + local
+            if after is not None and (s, gid) <= after:
+                continue
+            hits.append((s, gid))
+        hits.sort()
+        return hits
+
     @property
     def n_strings(self) -> int:
         # a plain int read: monotonic for unlocked readers even while a seal
         # is moving strings from the tail into a new segment under the lock
         return self._n_total
+
+    # ------------------------------------------------------ reverse lookup
+    def _query_encoder(self) -> Encoder:
+        # queries must parse against the exact generation the tail was
+        # encoded with — share the tail encoder instead of building one
+        return self._encoder
+
+    def _encode_queries(self, strings: list[bytes]) -> list[bytes]:
+        # serialise against extend()'s lazy LPM rebuild, exactly like the
+        # optimistic encode pass of extend() itself
+        with self._encode_lock:
+            return super()._encode_queries(strings)
 
     # ----------------------------------------------------------------- writes
     def append(self, s: bytes) -> int:
@@ -250,6 +294,10 @@ class MutableStringStore(CompressedStringStore):
         while pos < n:
             take = min(n - pos, spc - len(self._tail))
             chunk = payloads[pos : pos + take]
+            if self._tail_map is not None:
+                start = len(self._tail)
+                for j, p in enumerate(chunk):
+                    self._tail_map.setdefault(p, start + j)
             self._tail.extend(chunk)
             self._tail_raw.extend(raw_lens[pos : pos + take])
             comp = sum(map(len, chunk))
@@ -268,11 +316,23 @@ class MutableStringStore(CompressedStringStore):
         offsets = np.zeros(len(self._tail) + 1, dtype=np.int64)
         np.cumsum([len(p) for p in self._tail], out=offsets[1:])
         payload = np.frombuffer(b"".join(self._tail), dtype=np.uint8)
+        # once anyone has issued a reverse lookup, keep the index current:
+        # build the new segment's index at seal time (tail decoded before
+        # it is cleared). Stores nobody locates in never pay this decode.
+        raw = (self._tail_scan(0, len(self._tail))
+               if (self._seg_indexes or self._tail_map is not None)
+               else None)
         self.segments.append_segment(payload, offsets,
                                      raw_bytes=sum(self._tail_raw))
+        if raw is not None:
+            seg = self.segments.segments[-1]
+            self._seg_indexes[seg.index] = SegmentIndex.build(
+                seg.payload, seg.offsets, raw)
         self._tail.clear()
         self._tail_raw.clear()
         self._tail_bytes = 0
+        if self._tail_map is not None:
+            self._tail_map = {}
 
     # ------------------------------------------------------------- compaction
     def compact(self, *, sample_strings: int | None = None,
@@ -389,6 +449,11 @@ class MutableStringStore(CompressedStringStore):
         self._tail = []
         self._tail_raw = []
         self._tail_bytes = 0
+        # reverse-lookup state is generation-scoped: fingerprints index the
+        # *encoded* forms, which the rewrite just changed wholesale
+        self._seg_indexes = {}
+        self._tail_map = None
+        self._locate_encoder = None
         # _n_total is deliberately NOT reset: acknowledged ids must never
         # un-publish, and the caller re-files any delta beyond the corpus
         self.cache.clear()
@@ -456,6 +521,10 @@ class MutableStringStore(CompressedStringStore):
             manifest = {"format_version": 1, "current": vname,
                         "codec": artifact.codec, "n_strings": self.n_strings,
                         "compactions": self.compactions}
+            # captured in the same locked snapshot as the corpus: the
+            # sidecar on disk must describe exactly the segments it sits
+            # next to
+            index_blob = self._dump_index_locked()
             # cleared HERE, inside the snapshot's locked section: an append
             # landing while the files below are written re-marks the store
             # dirty and is not covered by this snapshot
@@ -465,12 +534,16 @@ class MutableStringStore(CompressedStringStore):
         artifact.save(os.path.join(sub, self._DICT_FILE))
         corpus.save(os.path.join(sub, self._CORPUS_FILE))
         write_json_atomic(os.path.join(sub, self._META_FILE), meta)
+        if index_blob is not None:
+            with open(os.path.join(sub, self._INDEX_FILE), "wb") as f:
+                f.write(index_blob)
         write_json_atomic(os.path.join(dir_path, self._CURRENT_FILE),
                           manifest)
         # when upgrading a plain (flat) store directory to the versioned
         # layout, drop the superseded flat files: a reader must never find
         # two generations disagreeing in one directory
-        for name in (self._DICT_FILE, self._CORPUS_FILE, self._META_FILE):
+        for name in (self._DICT_FILE, self._CORPUS_FILE, self._META_FILE,
+                     self._INDEX_FILE):
             stale = os.path.join(dir_path, name)
             if os.path.exists(stale):
                 os.remove(stale)
@@ -516,6 +589,7 @@ class MutableStringStore(CompressedStringStore):
             store.drift.compressed_bytes = int(meta["drift_compressed_bytes"])
             store.drift.observations = int(meta["drift_observations"])
         store.version_id = int(meta.get("version_id", 0))
+        store._load_index(sub)
         store._dir = dir_path
         store._dirty = False   # tail restore above is not an unsaved append
         return store

@@ -19,16 +19,20 @@ vectorised numpy ``PackedDictionary.decode_tokens`` path.
 
 from __future__ import annotations
 
+import heapq
 import json
 import os
 import threading
 import time
+from itertools import islice
 
 import numpy as np
 
 from repro.core import registry
 from repro.core.api import CompressedCorpus
 from repro.core.artifact import DictArtifact
+from repro.core.codec import Encoder
+from repro.core.index import SegmentIndex, dump_indexes, load_indexes
 from repro.core.packed import PackedDictionary
 from repro.obs import TRACER
 from repro.store.cache import LRUCache
@@ -104,6 +108,11 @@ class CompressedStringStore:
         self.num_buckets = int(num_buckets)
         self.use_pallas = use_pallas
         self._lock = threading.Lock()
+        # reverse-lookup state: per-segment indexes (built lazily on the
+        # first locate/scan_prefix, eagerly at seal time once active) and
+        # the query-side encoder (lazy: most stores never locate)
+        self._seg_indexes: dict[int, SegmentIndex] = {}
+        self._locate_encoder: Encoder | None = None
 
         # ----- backend resolution: per-codec registry capability, not an
         # isinstance/variant16 probe — an artifact opened on a jax-less host
@@ -160,6 +169,10 @@ class CompressedStringStore:
     _DICT_FILE = "dictionary.rpa"
     _CORPUS_FILE = "corpus.rpc"
     _META_FILE = "store.json"
+    #: optional reverse-lookup sidecar (per-segment fingerprint tables +
+    #: sort permutations); loaders validate it against the live
+    #: segmentation and silently rebuild on any mismatch
+    _INDEX_FILE = "index.npz"
     #: manifest of the versioned (writable-store) directory layout
     _CURRENT_FILE = "current.json"
     #: construction params persisted in store.json and restored by open()
@@ -198,6 +211,11 @@ class CompressedStringStore:
         self.corpus.save(os.path.join(dir_path, self._CORPUS_FILE))
         write_json_atomic(os.path.join(dir_path, self._META_FILE),
                           self.store_meta())
+        with self._lock:
+            blob = self._dump_index_locked()
+        if blob is not None:
+            with open(os.path.join(dir_path, self._INDEX_FILE), "wb") as f:
+                f.write(blob)
 
     @classmethod
     def open_corpus_dir(cls, dir_path: str, source,
@@ -211,7 +229,9 @@ class CompressedStringStore:
             os.path.join(dir_path, cls._CORPUS_FILE), mmap=mmap)
         kw = {k: meta[k] for k in cls._STORE_KW}
         kw.update(overrides)
-        return cls(source, corpus, **kw)
+        store = cls(source, corpus, **kw)
+        store._load_index(dir_path)
+        return store
 
     @classmethod
     def _resolve_current(cls, dir_path: str) -> str:
@@ -252,6 +272,18 @@ class CompressedStringStore:
                          "(read-only store has no tail)")
 
     def _tail_scan(self, lo: int, hi: int) -> list[bytes]:
+        return []
+
+    def _tail_locate(self, payload: bytes) -> int | None:
+        """Tail-local id of the string whose encoded form is ``payload``.
+        Call under ``self._lock``; the read-only base has no tail."""
+        return None
+
+    def _tail_prefix_hits(self, prefix: bytes,
+                          after: tuple[bytes, int] | None
+                          ) -> list[tuple[bytes, int]]:
+        """Sorted ``(string, gid)`` tail matches of ``prefix`` past the
+        ``after`` cursor. Call under ``self._lock``."""
         return []
 
     def _string_tokens(self, gid: int) -> np.ndarray:
@@ -352,6 +384,171 @@ class CompressedStringStore:
         if hi > sealed:
             out.extend(self._tail_scan(max(lo, sealed) - sealed, hi - sealed))
         return out
+
+    # --------------------------------------------------- reverse lookup
+    #: optimistic encode attempts before locate takes the store lock for
+    #: the whole encode+probe (mirrors MutableStringStore.extend: a
+    #: compact() swapping the dictionary between the query parse and the
+    #: probe would compare encodings from different generations — byte
+    #: verification would then give false misses, or even a false hit if
+    #: two generations encode different strings to the same bytes)
+    _MAX_LOCATE_RETRIES = 3
+
+    def locate(self, s: bytes) -> int | None:
+        """Exact-match reverse lookup: the id whose ``get`` returns ``s``.
+
+        The query is encoded once against the store's dictionary and
+        compared in *compressed* form — no decompression on the probe
+        path. Duplicated strings resolve to their lowest id; absent
+        strings return ``None``. Exact match only: see :meth:`scan_prefix`
+        for prefix enumeration.
+        """
+        return self.locate_batch([s])[0]
+
+    def locate_batch(self, strings) -> list[int | None]:
+        """Batched :meth:`locate`; one encoder pass, order preserved."""
+        strings = [bytes(s) for s in strings]
+        if not strings:
+            return []
+        t0 = time.perf_counter()
+        out = None
+        for _ in range(self._MAX_LOCATE_RETRIES):
+            version = getattr(self, "version_id", 0)
+            payloads = self._encode_queries(strings)
+            with self._lock:
+                if getattr(self, "version_id", 0) == version:
+                    out = [self._locate_payload_locked(p) for p in payloads]
+                    break
+            # compact() swapped generations mid-parse: re-encode and retry
+        if out is None:
+            # retries exhausted: encode under the store lock itself, where
+            # no swap can interleave (same escape hatch as extend())
+            with self._lock:
+                corpus = self._query_encoder().encode(strings)
+                out = [self._locate_payload_locked(corpus.string_payload(i))
+                       for i in range(len(strings))]
+        n_hits = sum(1 for r in out if r is not None)
+        self.stats.record_locate(len(strings), n_hits,
+                                 time.perf_counter() - t0)
+        return out
+
+    def scan_prefix(self, prefix: bytes, limit: int | None = 100,
+                    after: tuple[bytes, int] | None = None
+                    ) -> list[tuple[int, bytes]]:
+        """Strings starting with ``prefix``: ``[(id, string), ...]`` in
+        ``(string, id)`` order.
+
+        Served from the per-segment sorted sidecars (binary search + one
+        independent decode per probed entry) merged with a linear filter
+        over the unsealed tail. ``after`` is an exclusive ``(string, id)``
+        resume cursor for pagination; ``limit=None`` returns every match.
+        Results reflect the dictionary generation at call time — a
+        concurrent ``compact()`` does not change ids, but paginating
+        across one may re-observe strings the swap re-filed.
+        """
+        prefix = bytes(prefix)
+        with self._lock:
+            runs: list[list[tuple[bytes, int]]] = []
+            for seg in self.segments.segments:
+                if seg.n_strings == 0:
+                    continue
+                idx = self._segment_index_locked(seg)
+                base = seg.base_id
+                seg_after = ((after[0], after[1] - base)
+                             if after is not None else None)
+                hits = idx.scan_prefix(
+                    prefix, limit,
+                    lambda loc, b=base: self._decode_one_locked(b + loc),
+                    after=seg_after)
+                if hits:
+                    runs.append([(s, base + loc) for loc, s in hits])
+            tail_hits = self._tail_prefix_hits(prefix, after)
+            if tail_hits:
+                runs.append(tail_hits)
+            merged = heapq.merge(*runs)
+            if limit is not None:
+                merged = islice(merged, limit)
+            out = [(gid, s) for s, gid in merged]
+        self.stats.prefix_scans += 1
+        self.stats.scan_strings += len(out)
+        return out
+
+    def _query_encoder(self) -> Encoder:
+        """Encoder for query strings; shares the compressor's tables. The
+        writable subclass returns its tail encoder instead (identical
+        encodings by construction — same generation, same tables)."""
+        if self._locate_encoder is None:
+            self._locate_encoder = Encoder(self.artifact,
+                                           codec=self.compressor)
+        return self._locate_encoder
+
+    def _encode_queries(self, strings: list[bytes]) -> list[bytes]:
+        """Compressed form of each query, current dictionary generation."""
+        corpus = self._query_encoder().encode(strings)
+        buf = corpus.payload.tobytes()
+        off = corpus.offsets
+        return [buf[off[i]:off[i + 1]] for i in range(len(strings))]
+
+    def _locate_payload_locked(self, payload: bytes) -> int | None:
+        """Probe sealed segments in id order, then the tail; first
+        byte-verified hit is the lowest global id."""
+        for seg in self.segments.segments:
+            if seg.n_strings == 0:
+                continue
+            idx = self._segment_index_locked(seg)
+            loc = idx.locate(payload, seg.payload, seg.offsets)
+            if loc is not None:
+                return seg.base_id + loc
+        loc = self._tail_locate(payload)
+        if loc is not None:
+            return self.segments.n_strings + loc
+        return None
+
+    def _segment_index_locked(self, seg) -> SegmentIndex:
+        """The segment's reverse-lookup index, built on first use. The
+        count re-check guards against segment-slot reuse (appending to an
+        empty corpus replaces the placeholder segment in slot 0)."""
+        idx = self._seg_indexes.get(seg.index)
+        if idx is not None and idx.n == seg.n_strings:
+            return idx
+        raw = self._scan_locked(seg.base_id, seg.base_id + seg.n_strings)
+        idx = SegmentIndex.build(seg.payload, seg.offsets, raw)
+        self._seg_indexes[seg.index] = idx
+        return idx
+
+    def _decode_one_locked(self, gid: int) -> bytes:
+        """One string through the LRU cache (scan_prefix probe path)."""
+        hit = self.cache.get(gid)
+        if hit is not None:
+            return hit
+        results = {gid: b""}
+        self._decode_misses([gid], results)
+        return results[gid]
+
+    def _dump_index_locked(self) -> bytes | None:
+        """Serialised sidecar of every up-to-date segment index, or None
+        when nothing is built (lazy rebuild is cheaper than a forced
+        decode of segments nobody has located in)."""
+        live: dict[int, tuple[int, SegmentIndex]] = {}
+        for seg in self.segments.segments:
+            idx = self._seg_indexes.get(seg.index)
+            if idx is not None and seg.n_strings and idx.n == seg.n_strings:
+                live[seg.index] = (seg.base_id, idx)
+        return dump_indexes(live) if live else None
+
+    def _load_index(self, dir_path: str) -> None:
+        """Adopt a persisted index sidecar if it matches the live
+        segmentation (position + base id + count); mismatches are dropped
+        per segment and rebuilt lazily."""
+        path = os.path.join(dir_path, self._INDEX_FILE)
+        if not os.path.exists(path):
+            return
+        with open(path, "rb") as f:
+            data = f.read()
+        with self._lock:
+            layout = {seg.index: (seg.base_id, seg.n_strings)
+                      for seg in self.segments.segments if seg.n_strings}
+            self._seg_indexes.update(load_indexes(data, layout))
 
     def stats_snapshot(self) -> dict:
         snap = self.stats.snapshot(self.cache.stats())

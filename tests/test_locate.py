@@ -1,0 +1,327 @@
+"""Reverse lookup (`locate`) and prefix enumeration (`scan_prefix`).
+
+The queryable-dictionary surface end to end: locate as the inverse of get
+(property-based where hypothesis is installed), miss/None semantics,
+prefix-scan ordering + limit + pagination across segment boundaries,
+mutable-tail visibility before/after seal and through a live compact(),
+index persistence through save/open, byte-identity of the sharded and tcp
+deployments against the in-process answers, and capability fallback
+against servers that predate OP_LOCATE/OP_SCAN_PREFIX.
+
+Everything here is stdlib + numpy (the RPC tier stays covered on jax-less
+hosts); spawned servers run in-process threads via ShardServer.start().
+"""
+
+import os
+
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # optional dev dep: property tests skip, the rest run
+    from _hypothesis_fallback import given, settings, st
+    HAVE_HYPOTHESIS = False
+
+from repro.client import connect, wrap
+from repro.data.synth import load_dataset
+from repro.distributed import ShardedStringStore, save_sharded
+from repro.net import DistributedStringStore, ShardServer
+from repro.net import protocol as P
+from repro.store import CompressedStringStore, MutableStringStore
+
+SAMPLE = 1 << 16
+
+
+@pytest.fixture(scope="module")
+def titles():
+    strings = load_dataset("book_titles", SAMPLE)[:1200]
+    strings[3] = b""
+    strings[7] = b"\x00\xff" * 9
+    strings[11] = strings[5]  # a duplicate: locate must return id 5
+    return strings
+
+
+@pytest.fixture(scope="module")
+def store(titles):
+    # small segments so queries cross many segment boundaries
+    return CompressedStringStore.build(
+        titles, sample_bytes=SAMPLE, strings_per_segment=128)
+
+
+@pytest.fixture(scope="module")
+def first_index(titles):
+    first: dict[bytes, int] = {}
+    for i, s in enumerate(titles):
+        first.setdefault(s, i)
+    return first
+
+
+# ----------------------------------------------------------- exact semantics
+def test_locate_is_inverse_of_get(store, titles, first_index):
+    for i in (0, 3, 7, 5, 11, 127, 128, 600, len(titles) - 1):
+        assert store.locate(titles[i]) == first_index[titles[i]]
+
+
+def test_locate_miss_returns_none(store, titles):
+    assert store.locate(b"@@definitely-absent@@") is None
+    assert store.locate(titles[0] + b"\x00") is None
+    assert store.locate(titles[42][:-1] + b"\xfe") is None
+
+
+def test_locate_batch_mixed_hits_and_misses(store, titles, first_index):
+    queries = [titles[9], b"@@absent@@", titles[400], titles[11]]
+    assert store.locate_batch(queries) == [
+        first_index[titles[9]], None, first_index[titles[400]], 5]
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_locate_inverse_property(store, titles, first_index, data):
+    i = data.draw(st.integers(0, len(titles) - 1))
+    assert store.locate(titles[i]) == first_index[titles[i]]
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.binary(max_size=40))
+def test_locate_arbitrary_bytes_never_wrong(store, first_index, s):
+    got = store.locate(s)
+    if s in first_index:
+        assert got == first_index[s]
+    else:
+        assert got is None
+
+
+# --------------------------------------------------------------- prefix scan
+def _expected_prefix(titles, prefix):
+    return sorted((s, i) for i, s in enumerate(titles) if s.startswith(prefix))
+
+
+def test_scan_prefix_ordering_across_segments(store, titles):
+    prefix = b"The "  # common: hits in many 128-string segments
+    expected = _expected_prefix(titles, prefix)
+    assert len(expected) > 10
+    hits = store.scan_prefix(prefix, limit=None)
+    assert [(s, g) for g, s in hits] == expected
+
+
+def test_scan_prefix_limit_and_pagination(store, titles):
+    prefix = b"The "
+    expected = _expected_prefix(titles, prefix)
+    page1 = store.scan_prefix(prefix, limit=7)
+    assert [(s, g) for g, s in page1] == expected[:7]
+    g_last, s_last = page1[-1]
+    page2 = store.scan_prefix(prefix, limit=7, after=(s_last, g_last))
+    assert [(s, g) for g, s in page2] == expected[7:14]
+
+
+def test_scan_prefix_no_match(store):
+    assert store.scan_prefix(b"\xfe\xfd\xfc", limit=10) == []
+
+
+# ------------------------------------------------------ mutable tail + compact
+def test_mutable_tail_locate_before_and_after_seal(store, titles):
+    m = MutableStringStore(store.artifact, store.corpus,
+                           strings_per_segment=128)
+    n0 = len(m)
+    new = [b"tail-string-%d" % k for k in range(20)]
+    ids = m.extend(new)
+    # visible the moment extend returns (still in the unsealed tail)
+    for s, i in zip(new, ids):
+        assert m.locate(s) == i
+        assert m.get(i) == s
+    # force the tail through a seal and re-check
+    filler = [b"filler-%d" % k for k in range(150)]
+    m.extend(filler)
+    assert m.locate(new[0]) == ids[0]
+    assert m.locate(filler[-1]) == n0 + 20 + len(filler) - 1
+    hits = m.scan_prefix(b"tail-string-1", limit=None)
+    assert [s for _g, s in hits] == sorted(
+        s for s in new if s.startswith(b"tail-string-1"))
+
+
+def test_locate_through_live_compact(store, titles, first_index):
+    m = MutableStringStore(store.artifact, store.corpus,
+                           strings_per_segment=128)
+    appended = [b"compact-me-%d" % k for k in range(40)]
+    ids = m.extend(appended)
+    m.compact()  # new dictionary generation: indexes must rebuild
+    for i in (0, 5, 11, 700):
+        assert m.locate(titles[i]) == first_index[titles[i]]
+    for s, i in zip(appended, ids):
+        assert m.locate(s) == i
+    # post-compact appends are locatable against the new dictionary
+    j = m.append(b"born-after-compact")
+    assert m.locate(b"born-after-compact") == j
+    assert m.locate(b"@@still-absent@@") is None
+
+
+# ----------------------------------------------------------- index persistence
+def test_index_persists_through_save_open(store, titles, first_index,
+                                          tmp_path):
+    d = str(tmp_path / "flat")
+    store.locate(titles[0])  # force index construction so save persists it
+    store.save(d)
+    assert os.path.exists(os.path.join(d, "index.npz"))
+    reopened = CompressedStringStore.open(d)
+    assert reopened._seg_indexes, "persisted index should preload on open"
+    assert reopened.locate(titles[321]) == first_index[titles[321]]
+    assert reopened.locate(b"@@absent@@") is None
+
+
+def test_missing_index_file_rebuilds_lazily(store, titles, first_index,
+                                            tmp_path):
+    d = str(tmp_path / "flat2")
+    store.save(d)
+    idx_path = os.path.join(d, "index.npz")
+    if os.path.exists(idx_path):
+        os.remove(idx_path)
+    reopened = CompressedStringStore.open(d)
+    assert reopened.locate(titles[100]) == first_index[titles[100]]
+
+
+def test_mutable_save_open_roundtrip(store, titles, first_index, tmp_path):
+    d = str(tmp_path / "mut")
+    m = MutableStringStore(store.artifact, store.corpus,
+                           strings_per_segment=128)
+    m.extend([b"persist-me-%d" % k for k in range(10)])
+    m.locate(b"persist-me-0")  # build indexes so save writes the sidecar
+    m.save(d)
+    reopened = MutableStringStore.open(d)
+    assert reopened.locate(b"persist-me-7") == len(titles) + 7
+    assert reopened.locate(titles[50]) == first_index[titles[50]]
+
+
+# ------------------------------------------------- sharded + tcp byte-identity
+@pytest.fixture(scope="module")
+def sharded_dir(store, tmp_path_factory):
+    d = str(tmp_path_factory.mktemp("locate") / "shards")
+    save_sharded(store, d, 3)
+    return d
+
+
+@pytest.fixture(scope="module")
+def probe(titles):
+    return [titles[0], titles[11], titles[500], titles[1199], b"@@absent@@"]
+
+
+def test_sharded_matches_flat(store, sharded_dir, titles, probe):
+    sharded = ShardedStringStore.open(sharded_dir)
+    assert sharded.locate_batch(probe) == store.locate_batch(probe)
+    prefix = b"The "
+    assert (sharded.scan_prefix(prefix, limit=None)
+            == store.scan_prefix(prefix, limit=None))
+    assert sharded.scan_prefix(prefix, limit=5) == store.scan_prefix(
+        prefix, limit=5)
+
+
+def test_tcp_matches_in_process(store, sharded_dir, probe):
+    servers = [
+        ShardServer.from_dir(
+            os.path.join(sharded_dir, f"shard-{k:04d}")).start()
+        for k in range(3)
+    ]
+    try:
+        dist = DistributedStringStore.connect(
+            [s.address for s in servers], dir_path=sharded_dir)
+        try:
+            assert all(c.supports_locate for c in dist.clients)
+            assert dist.locate_batch(probe) == store.locate_batch(probe)
+            prefix = b"The "
+            assert (dist.scan_prefix(prefix, limit=None)
+                    == store.scan_prefix(prefix, limit=None))
+            page1 = dist.scan_prefix(prefix, limit=4)
+            assert page1 == store.scan_prefix(prefix, limit=4)
+            g, s = page1[-1]
+            assert (dist.scan_prefix(prefix, limit=4, after=(s, g))
+                    == store.scan_prefix(prefix, limit=4, after=(s, g)))
+        finally:
+            dist.close()
+    finally:
+        for srv in servers:
+            srv.close()
+
+
+class _PreLocateServer(ShardServer):
+    """A server image predating OP_LOCATE: echoes the capability probe and
+    rejects the new ops, like any old peer would."""
+
+    def dispatch(self, kind, payload):
+        if kind == P.OP_PING and payload == P.CAPS_PROBE:
+            return payload
+        if kind in (P.OP_LOCATE, P.OP_SCAN_PREFIX):
+            raise P.ProtocolError(f"unknown op 0x{kind:02X}")
+        return super().dispatch(kind, payload)
+
+
+def test_old_server_capability_fallback(store, sharded_dir, probe):
+    servers = [
+        _PreLocateServer.from_dir(
+            os.path.join(sharded_dir, f"shard-{k:04d}")).start()
+        for k in range(3)
+    ]
+    try:
+        dist = DistributedStringStore.connect(
+            [s.address for s in servers], dir_path=sharded_dir)
+        try:
+            assert not any(c.supports_locate for c in dist.clients)
+            # scan-side fallback: identical answers, no new ops on the wire
+            assert dist.locate_batch(probe) == store.locate_batch(probe)
+            prefix = b"The "
+            assert (dist.scan_prefix(prefix, limit=6)
+                    == store.scan_prefix(prefix, limit=6))
+        finally:
+            dist.close()
+    finally:
+        for srv in servers:
+            srv.close()
+
+
+# -------------------------------------------------------------- client surface
+def test_client_locate_over_every_backend(store, sharded_dir, titles,
+                                          first_index, probe, tmp_path):
+    flat = str(tmp_path / "client-flat")
+    store.save(flat)
+    want = store.locate_batch(probe)
+    prefix_hits = store.scan_prefix(b"The ", limit=9)
+
+    def check(client):
+        with client:
+            assert client.locate(titles[11]) == 5
+            assert client.locate(b"@@absent@@") is None
+            assert client.locate_batch(probe) == want
+            assert client.locate_batch(probe, timeout=30.0) == want
+            assert client.locate_async(titles[500]).result(30) == \
+                first_index[titles[500]]
+            assert client.scan_prefix(b"The ", limit=9) == prefix_hits
+            assert list(client.scan_prefix_iter(b"The ", chunk=4))[:9] == \
+                prefix_hits
+            ops = client.stats()["ops"]
+            assert ops.get("locate", 0) >= 3
+
+    check(connect(f"file://{flat}"))
+    check(connect(f"shard://{sharded_dir}"))
+    servers = [
+        ShardServer.from_dir(
+            os.path.join(sharded_dir, f"shard-{k:04d}")).start()
+        for k in range(3)
+    ]
+    try:
+        dist = DistributedStringStore.connect(
+            [s.address for s in servers], dir_path=sharded_dir)
+        check(wrap(dist))
+        dist.close()
+    finally:
+        for srv in servers:
+            srv.close()
+
+
+def test_locate_stats_counters(store, titles):
+    before = store.stats_snapshot()
+    store.locate_batch([titles[1], b"@@absent@@"])
+    store.scan_prefix(b"The ", limit=3)
+    after = store.stats_snapshot()
+    assert after["locates"] - before["locates"] == 2
+    assert after["locate_hits"] - before["locate_hits"] == 1
+    assert after["prefix_scans"] - before["prefix_scans"] == 1
