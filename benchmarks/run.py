@@ -210,6 +210,31 @@ def bench_loadgen(size_mib: int) -> None:
               f"client_p99_us={r['client_p99_us']}")
 
 
+def bench_tier(size_mib: int) -> None:
+    """Tiered storage: memory shed by demotion, RLZ cold-tier ratio, and
+    the hot-vs-cold batched read cost (byte-identity asserted inside)."""
+    from benchmarks.tier_bench import tier_bench
+    rows = tier_bench(size_mib)
+    _dump("tier", rows)
+    for r in rows:
+        op = r["op"]
+        if op.startswith("multiget"):
+            us = r["total_s"] / max(1, r["n"]) * 1e6
+            _emit(f"tier/{op}/store", us,
+                  f"lookups_per_s={r['lookups_per_s']};p50_us={r['p50_us']};"
+                  f"p99_us={r['p99_us']}")
+        elif op == "memory-drop":
+            _emit("tier/memory-drop/cold", r["total_s"] * 1e6,
+                  f"memory_drop_pct={r['memory_drop_pct']};"
+                  f"before_bytes={r['before_bytes']};"
+                  f"after_bytes={r['after_bytes']};n_segments={r['n']}")
+        else:  # rlz-ratio
+            _emit("tier/rlz-ratio/cold", 0.0,
+                  f"rlz_ratio={r['rlz_ratio']};raw_bytes={r['raw_bytes']};"
+                  f"rlz_bytes={r['rlz_bytes']};"
+                  f"segments_per_s={r['segments_per_s']}")
+
+
 def bench_persist(size_mib: int) -> None:
     """Artifact save/load + store.open latency vs retrain-from-scratch."""
     from benchmarks.persist_bench import persist_bench
@@ -251,6 +276,7 @@ ALL = {
     "client": bench_client,
     "locate": bench_locate,
     "loadgen": bench_loadgen,
+    "tier": bench_tier,
     "roofline": bench_roofline,
 }
 

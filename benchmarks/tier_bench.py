@@ -1,0 +1,92 @@
+"""Tiered-storage benchmark: what demotion buys and what cold reads cost.
+
+Builds a payload-dominated store (small training sample so segment bytes
+dwarf the dictionary's fixed resident cost — the regime tiering is for),
+demotes every sealed segment to the RLZ cold tier, and measures:
+
+* ``memory-drop`` — ``memory_bytes`` shed by majority demotion, as a
+  percentage. This is the acceptance gate: a majority-demoted store must
+  answer every read byte-identically while resident memory falls >= 40%.
+* ``rlz-ratio`` — raw corpus bytes over the cold tier's factor-array
+  bytes (how well RLZ-vs-dictionary compresses relative to raw).
+* ``multiget-hot`` / ``multiget-cold`` — the same uniform batched read
+  mix against the all-hot and the all-cold store, cache disabled, so the
+  cold-read tax is visible rather than hidden behind the LRU.
+* ``demote`` — segments/s for the re-encode + container write itself.
+
+Byte-identity is asserted inside the bench — a run that answers wrong
+bytes crashes instead of reporting a great number.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import dataset
+from repro.core.metrics import latency_summary
+from repro.store import CompressedStringStore
+
+#: training sample: deliberately small (256 KiB) so the dictionary stays a
+#: minority of the resident footprint at every bench size
+_SAMPLE = 1 << 18
+
+
+def tier_bench(size_mib: int, n_queries: int = 4000, batch: int = 64,
+               seed: int = 0,
+               dataset_name: str = "book_titles") -> list[dict]:
+    strings = dataset(dataset_name, size_mib << 20)
+    n = len(strings)
+    store = CompressedStringStore.build(
+        strings, sample_bytes=_SAMPLE, seed=seed, cache_bytes=0)
+    rng = np.random.default_rng(seed)
+    ids = rng.integers(0, n, n_queries).tolist()
+    batches = [ids[k:k + batch] for k in range(0, n_queries, batch)]
+    expected = [[strings[i] for i in b] for b in batches]
+
+    def measure(op: str) -> dict:
+        lat = []
+        for b, want in zip(batches, expected):
+            t0 = time.perf_counter()
+            got = store.multiget(b)
+            lat.append(time.perf_counter() - t0)
+            assert got == want, f"{op}: wrong bytes for batch"
+        s = latency_summary(lat)
+        total = sum(lat)
+        return {"dataset": dataset_name, "op": op, "n": n_queries,
+                "p50_us": round(s["p50_us"], 2),
+                "p99_us": round(s["p99_us"], 2),
+                "lookups_per_s": round(n_queries / max(total, 1e-9), 1),
+                "total_s": round(total, 4)}
+
+    rows = [measure("multiget-hot")]
+
+    before = store.memory_bytes
+    tier = store.enable_tiering(promote_above=1e9)  # pin cold under load
+    t0 = time.perf_counter()
+    reports = [r for r in (tier.demote(s.index)
+                           for s in store.segments.segments)
+               if r is not None]
+    demote_s = time.perf_counter() - t0
+    after = store.memory_bytes
+    assert len(tier.cold) > store.segments.n_segments // 2, "not majority cold"
+
+    drop_pct = 100.0 * (before - after) / max(before, 1)
+    raw_bytes = sum(r["raw_bytes"] for r in reports)
+    rlz_bytes = sum(r["rlz_bytes"] for r in reports)
+    rows.append({"dataset": dataset_name, "op": "memory-drop",
+                 "n": len(reports), "before_bytes": before,
+                 "after_bytes": after,
+                 "memory_drop_pct": round(drop_pct, 2),
+                 "total_s": round(demote_s, 4)})
+    rows.append({"dataset": dataset_name, "op": "rlz-ratio",
+                 "n": len(reports), "raw_bytes": raw_bytes,
+                 "rlz_bytes": rlz_bytes,
+                 "rlz_ratio": round(raw_bytes / max(rlz_bytes, 1), 3),
+                 "segments_per_s": round(len(reports) / max(demote_s, 1e-9),
+                                         1)})
+    rows.append(measure("multiget-cold"))
+    snap = store.stats_snapshot()["tier"]
+    assert snap["n_cold"] == len(reports)
+    return rows

@@ -488,12 +488,18 @@ class StoreClient:
 
         launch()
         if budget > 1 and hedge_s is not None:
-            timer = threading.Timer(float(hedge_s), launch)
-            timer.daemon = True
-            with lock:
-                if not state["done"]:
-                    state["timer"] = timer
-                    timer.start()
+            if hedge_s <= 0:
+                # an immediate hedge must actually be immediate: going
+                # through a zero-delay timer would race thread spawn
+                # against the first attempt's answer
+                launch()
+            else:
+                timer = threading.Timer(float(hedge_s), launch)
+                timer.daemon = True
+                with lock:
+                    if not state["done"]:
+                        state["timer"] = timer
+                        timer.start()
         return out
 
     def _hedge_prefs(self, read_preference: str | None,
@@ -799,6 +805,39 @@ class StoreClient:
         if not hasattr(self.backend, "register_replica"):
             raise TypeError("register_replica requires a tcp:// backend")
         return self.backend.register_replica(shard, address, **client_kw)
+
+    # ----------------------------------------------------------------- tiering
+    def _tier(self, action: str, segment: int | None = None,
+              shard: int | None = None, params: dict | None = None):
+        """Route one tier-control op to the backend: routers fan it out per
+        shard (list of reports), local stores answer directly (one dict)."""
+        self._check_open()
+        if self._is_router:
+            return self.backend.tier(action, segment=segment, shard=shard,
+                                     params=params)
+        if shard is not None:
+            raise TypeError("shard= targeting requires a shard:// or tcp:// "
+                            "backend")
+        from repro.store.tier import tier_op
+        return tier_op(self.backend, action=action, segment=segment,
+                       params=params)
+
+    def demote(self, segment: int | None = None, shard: int | None = None,
+               **params):
+        """Demote sealed segments to the mmap'd RLZ cold tier (all eligible
+        segments when ``segment`` is None). ``params`` become TierManager
+        thresholds on first use (demote_below/promote_above/halflife_s)."""
+        return self._tier("demote", segment=segment, shard=shard,
+                          params=params or None)
+
+    def promote(self, segment: int | None = None, shard: int | None = None):
+        """Promote cold segments back to hot OnPair heap arrays."""
+        return self._tier("promote", segment=segment, shard=shard)
+
+    def tier_stats(self):
+        """Tier snapshot(s): cold segment set, demotion/promotion counts,
+        per-segment read rates ({"enabled": False} where tiering is off)."""
+        return self._tier("stats")
 
     def close(self) -> None:
         if self._closed:

@@ -238,6 +238,13 @@ class ShardRouter:
         (string, local_id) order; ``after`` is a shard-local cursor."""
         raise NotImplementedError
 
+    def _shard_tier(self, k: int, action: str = "stats",
+                    segment: int | None = None,
+                    params: dict | None = None) -> dict:
+        """One tier-control op against shard ``k`` (see
+        ``repro.store.tier.tier_op`` for the action contract)."""
+        raise NotImplementedError
+
     def _tail_extend(self, strings: list[bytes]) -> tuple[list[int], int]:
         """Append to the tail shard; returns (local ids, new local count)."""
         raise NotImplementedError
@@ -360,6 +367,35 @@ class ShardRouter:
                 "bounds": [list(b) for b in self.bounds],
                 "shards": shards}
 
+    # ---------------------------------------------------------------- tiering
+    def tier(self, action: str = "stats", segment: int | None = None,
+             shard: int | None = None,
+             params: dict | None = None) -> list[dict]:
+        """Tier control across the cluster: one per-shard report list.
+        ``shard=None`` fans the op out to every shard; ``segment`` (when
+        given) is shard-local and requires an explicit ``shard``."""
+        if segment is not None and shard is None:
+            raise ValueError("segment is shard-local: pass shard= with it")
+        targets = range(self.n_shards) if shard is None else [shard]
+        return [self._shard_tier(k, action, segment=segment, params=params)
+                for k in targets]
+
+    def demote(self, shard: int | None = None, segment: int | None = None,
+               **params) -> list[dict]:
+        """Demote segments to the RLZ cold tier (all eligible segments of
+        the targeted shards when ``segment`` is None)."""
+        return self.tier("demote", segment=segment, shard=shard,
+                         params=params or None)
+
+    def promote(self, shard: int | None = None,
+                segment: int | None = None) -> list[dict]:
+        """Promote cold segments back to hot OnPair arrays."""
+        return self.tier("promote", segment=segment, shard=shard)
+
+    def tier_stats(self) -> list[dict]:
+        """Per-shard tier snapshots (``{"enabled": False}`` where off)."""
+        return self.tier("stats")
+
     # ----------------------------------------------------------------- writes
     def append(self, s: bytes) -> int:
         return self.extend([s])[0]
@@ -450,6 +486,13 @@ class ShardedStringStore(ShardRouter):
                            ) -> list[tuple[int, bytes]]:
         # a shard store's global ids ARE shard-local ids
         return self.stores[k].scan_prefix(prefix, limit, after)
+
+    def _shard_tier(self, k: int, action: str = "stats",
+                    segment: int | None = None,
+                    params: dict | None = None) -> dict:
+        from repro.store.tier import tier_op
+        return tier_op(self.stores[k], action=action, segment=segment,
+                       params=params)
 
     def _writable_tail_store(self):
         store = self.stores[-1]

@@ -80,6 +80,11 @@ class WorkloadSpec:
     prefix_len: int = 4
     prefix_limit: int = 64
     locate_miss_fraction: float = 0.1
+    #: tiering knobs: redirect this fraction of read keys into the coldest
+    #: ``cold_band`` tail of the id space, so a tiered store sees a long
+    #: tail of demoted-segment hits instead of a pure zipf head
+    cold_fraction: float = 0.0
+    cold_band: float = 0.5
     append_bytes: int = 64        # synthetic payload size per written string
     extend_batch: int = 32
     read_preference: str | None = None
@@ -103,6 +108,12 @@ class WorkloadSpec:
             raise ValueError(f"unknown op kinds in mix: {bad}")
         if not any(w > 0 for w in self.mix.values()):
             raise ValueError("mix needs at least one positive weight")
+        if not 0.0 <= self.cold_fraction <= 1.0:
+            raise ValueError(
+                f"cold_fraction must be in [0, 1]: {self.cold_fraction!r}")
+        if not 0.0 < self.cold_band <= 1.0:
+            raise ValueError(
+                f"cold_band must be in (0, 1]: {self.cold_band!r}")
         if isinstance(self.slo, dict):
             self.slo = SLO.from_dict(self.slo)
 
@@ -136,18 +147,30 @@ def _popularity_ids(spec: WorkloadSpec, rng: np.random.Generator,
     if count == 0:
         return np.empty(0, dtype=np.int64)
     if spec.distribution == "uniform":
-        return rng.integers(0, n_strings, size=count, dtype=np.int64)
-    if spec.distribution == "sequential":
-        return np.arange(count, dtype=np.int64) % n_strings
-    # zipf over ranks 1..n via the truncated CDF (exact, no rejection),
-    # then rank -> id scatter so hot keys spread across shards
-    ranks = min(n_strings, 1 << 20)
-    pmf = 1.0 / np.power(np.arange(1, ranks + 1, dtype=np.float64),
-                         spec.zipf_s)
-    cdf = np.cumsum(pmf)
-    cdf /= cdf[-1]
-    drawn = np.searchsorted(cdf, rng.random(count), side="left")
-    return (drawn.astype(np.int64) * _SCATTER) % n_strings
+        ids = rng.integers(0, n_strings, size=count, dtype=np.int64)
+    elif spec.distribution == "sequential":
+        ids = np.arange(count, dtype=np.int64) % n_strings
+    else:
+        # zipf over ranks 1..n via the truncated CDF (exact, no rejection),
+        # then rank -> id scatter so hot keys spread across shards
+        ranks = min(n_strings, 1 << 20)
+        pmf = 1.0 / np.power(np.arange(1, ranks + 1, dtype=np.float64),
+                             spec.zipf_s)
+        cdf = np.cumsum(pmf)
+        cdf /= cdf[-1]
+        drawn = np.searchsorted(cdf, rng.random(count), side="left")
+        ids = (drawn.astype(np.int64) * _SCATTER) % n_strings
+    # cold-skew redirect, drawn only when the knob is on so older specs
+    # keep byte-identical schedules (same guard discipline as locate miss)
+    if spec.cold_fraction > 0.0:
+        band0 = int(n_strings * (1.0 - spec.cold_band))
+        pick = rng.random(count) < float(spec.cold_fraction)
+        k = int(pick.sum())
+        if k:
+            ids = ids.copy()
+            ids[pick] = rng.integers(band0, n_strings, size=k,
+                                     dtype=np.int64)
+    return ids
 
 
 def build_schedule(spec: WorkloadSpec, n_strings: int,

@@ -60,7 +60,12 @@ CAPS_PROBE = b"\x00REPRO-CAPS\x00"
 #: advertises the reverse-lookup ops (OP_LOCATE / OP_SCAN_PREFIX) so a
 #: new client falls back to scan-side filtering against an old server
 #: instead of tripping its unknown-op error path on every call
-SERVER_CAPS = {"trace": True, "trace_version": TRACED_VERSION, "locate": True}
+SERVER_CAPS = {
+    "trace": True,
+    "trace_version": TRACED_VERSION,
+    "locate": True,
+    "tier": True,
+}
 
 #: refuse frames above this size unless the caller raises the limit
 DEFAULT_MAX_FRAME = 64 << 20
@@ -78,6 +83,7 @@ OP_SAVE = 0x09
 OP_TRACE_DUMP = 0x0A
 OP_LOCATE = 0x0B
 OP_SCAN_PREFIX = 0x0C
+OP_TIER = 0x0D
 
 # response statuses
 ST_OK = 0x40
@@ -96,6 +102,7 @@ OP_NAMES = {
     OP_TRACE_DUMP: "trace_dump",
     OP_LOCATE: "locate",
     OP_SCAN_PREFIX: "scan_prefix",
+    OP_TIER: "tier",
 }
 
 

@@ -59,7 +59,7 @@ from repro.store.store import write_json_atomic
 #: slow-but-alive server, so blind resends would duplicate work
 _IDEMPOTENT_OPS = frozenset(
     {P.OP_PING, P.OP_GET, P.OP_MULTIGET, P.OP_SCAN, P.OP_STATS,
-     P.OP_TRACE_DUMP, P.OP_LOCATE, P.OP_SCAN_PREFIX}
+     P.OP_TRACE_DUMP, P.OP_LOCATE, P.OP_SCAN_PREFIX, P.OP_TIER}
 )
 
 
@@ -161,6 +161,15 @@ class RemoteShardClient:
         if self._caps is None:
             self._probe_caps()
         return bool(self._caps and self._caps.get("locate"))
+
+    @property
+    def supports_tier(self) -> bool:
+        """Does the server answer OP_TIER (cold-tier control)? Same
+        one-shot CAPS_PROBE; an old server's echo resolves to False and
+        tier calls report {"enabled": False} instead of erroring."""
+        if self._caps is None:
+            self._probe_caps()
+        return bool(self._caps and self._caps.get("tier"))
 
     def _call(self, op: int, payload: bytes = b"", timeout: float = -1.0) -> bytes:
         """One request/response exchange, traced when a request trace is
@@ -288,6 +297,27 @@ class RemoteShardClient:
         """The server's slow-request log: its ``n`` slowest recent traces."""
         return P.unpack_json(
             self._call(P.OP_TRACE_DUMP, P.pack_json({"n": int(n)})))
+
+    def tier(
+        self,
+        action: str = "stats",
+        segment: int | None = None,
+        params: dict | None = None,
+    ) -> dict:
+        """Tier control on the shard server: ``stats`` / ``demote`` /
+        ``promote`` (``segment=None`` acts on every eligible segment).
+        Servers predating OP_TIER report ``{"enabled": False}``."""
+        if not self.supports_tier:
+            return {"enabled": False}
+        req: dict = {"action": action}
+        if segment is not None:
+            req["segment"] = int(segment)
+        if params:
+            req["params"] = params
+        # demotion re-encodes whole segments: let it outlast the timeout
+        return P.unpack_json(
+            self._call(P.OP_TIER, P.pack_json(req), timeout=None)
+        )
 
     def compact(self, **kw) -> dict:
         # retrain + rewrite can far outlast the request timeout: block
@@ -545,6 +575,17 @@ class DistributedStringStore(ShardRouter):
         if limit is not None:
             hits = hits[:limit]
         return [(local, s) for s, local in hits]
+
+    def _shard_tier(
+        self,
+        k: int,
+        action: str = "stats",
+        segment: int | None = None,
+        params: dict | None = None,
+    ) -> dict:
+        # tier control always targets the primary: demotion state lives
+        # with the store that owns the segment files
+        return self.clients[k].tier(action, segment=segment, params=params)
 
     def _fanout_multiget(
         self,

@@ -275,6 +275,18 @@ class ShardServer:
             # runs in this connection's handler thread: other connections
             # keep being served while the store rewrites itself
             return P.pack_json(self.store.compact(**kw))
+        if kind == P.OP_TIER:
+            from repro.store.tier import tier_op
+
+            req = P.unpack_json(payload) if payload else {}
+            return P.pack_json(
+                tier_op(
+                    self.store,
+                    action=req.get("action", "stats"),
+                    segment=req.get("segment"),
+                    params=req.get("params"),
+                )
+            )
         if kind == P.OP_SAVE:
             target = getattr(self.store, "_dir", None)
             if not hasattr(self.store, "extend") or target is None:

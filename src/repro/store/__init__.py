@@ -12,7 +12,10 @@ Layered between the compression algorithms (repro.core) / device kernels
   mutable  — MutableStringStore: the write path — frozen-dictionary
              append into an open tail, sealing into immutable segments,
              drift-triggered compact() with versioned-directory swap
-  drift    — DriftMonitor: achieved vs train-time compression ratio
+  drift    — DriftMonitor: achieved vs train-time compression ratio,
+             plus the per-segment read-rate EWMA (tiering temperature)
+  tier     — TierManager: RLZ cold tier (repro.core.rlz) with
+             temperature-driven demotion/promotion behind the store API
   service  — micro-batching request queue coalescing point lookups
              (reads and appends share one worker)
   stats    — serving counters surfaced through repro.core.metrics
@@ -29,7 +32,8 @@ from repro.store.segment import Segment, SegmentedCorpus
 from repro.store.service import StoreService
 from repro.store.stats import StoreStats
 from repro.store.store import CompressedStringStore
+from repro.store.tier import TierManager, tier_op
 
 __all__ = ["CompressedStringStore", "DriftMonitor", "LRUCache",
            "MutableStringStore", "Segment", "SegmentedCorpus",
-           "StoreService", "StoreStats"]
+           "StoreService", "StoreStats", "TierManager", "tier_op"]

@@ -19,6 +19,8 @@ handful of unlucky strings from triggering a full rewrite.
 
 from __future__ import annotations
 
+from time import perf_counter as _perf_counter
+
 import numpy as np
 
 
@@ -34,7 +36,8 @@ class DriftMonitor:
 
     def __init__(self, threshold: float = 0.2,
                  baseline_ratio: float | None = None,
-                 min_bytes: int = 1 << 14):
+                 min_bytes: int = 1 << 14,
+                 read_halflife_s: float = 30.0):
         if not 0.0 < threshold < 1.0:
             raise ValueError(f"threshold must be in (0, 1), got {threshold}")
         self.threshold = float(threshold)
@@ -43,6 +46,10 @@ class DriftMonitor:
         self.raw_bytes = 0
         self.compressed_bytes = 0
         self.observations = 0
+        # per-segment read-rate EWMA (the tiering temperature signal):
+        # segment index -> [decayed read count, last update perf_counter]
+        self.read_halflife_s = float(read_halflife_s)
+        self._read_ewma: dict[int, list[float]] = {}
 
     # -------------------------------------------------------------- recording
     def observe(self, raw_bytes: int, compressed_bytes: int) -> None:
@@ -59,11 +66,55 @@ class DriftMonitor:
             self.observations = 0
 
     def reset(self, baseline_ratio: float | None = None) -> None:
-        """Start a fresh observation window (after a compaction)."""
+        """Start a fresh observation window (after a compaction). The
+        read-rate EWMA resets too: segment indexes belong to the rewritten
+        generation."""
         self.baseline_ratio = baseline_ratio
         self.raw_bytes = 0
         self.compressed_bytes = 0
         self.observations = 0
+        self._read_ewma.clear()
+
+    # ---------------------------------------------------- read-rate EWMA
+    # Exponentially-decayed per-segment read counts: the decayed count C
+    # halves every ``read_halflife_s`` idle seconds, and the steady-state
+    # rate it converges to is ``C * ln2 / halflife`` reads/s — tiering's
+    # temperature signal (repro.store.tier), a first-class measure instead
+    # of raw lookup counters.
+    _LN2 = 0.6931471805599453
+
+    def note_reads(self, counts: dict[int, int],
+                   now: float | None = None) -> None:
+        """Fold ``{segment_index: reads}`` from one batched lookup into the
+        per-segment EWMA. ``now`` is a ``time.perf_counter()`` timestamp
+        (injectable so tests can steer the clock)."""
+        if now is None:
+            now = _perf_counter()
+        for seg, c in counts.items():
+            ent = self._read_ewma.get(seg)
+            if ent is None:
+                self._read_ewma[seg] = [float(c), now]
+            else:
+                dt = max(0.0, now - ent[1])
+                ent[0] = ent[0] * 0.5 ** (dt / self.read_halflife_s) + c
+                ent[1] = now
+
+    def read_rate(self, seg: int, now: float | None = None) -> float:
+        """Decay-weighted reads/s for one segment (0.0 if never read)."""
+        ent = self._read_ewma.get(seg)
+        if ent is None:
+            return 0.0
+        if now is None:
+            now = _perf_counter()
+        decayed = ent[0] * 0.5 ** (max(0.0, now - ent[1])
+                                   / self.read_halflife_s)
+        return decayed * self._LN2 / self.read_halflife_s
+
+    def read_rates(self, now: float | None = None) -> dict[int, float]:
+        """Read rate of every segment that has ever been read."""
+        if now is None:
+            now = _perf_counter()
+        return {seg: self.read_rate(seg, now=now) for seg in self._read_ewma}
 
     # -------------------------------------------------------------- decisions
     @property

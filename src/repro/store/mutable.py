@@ -89,7 +89,8 @@ class MutableStringStore(CompressedStringStore):
     def __init__(self, source, corpus: CompressedCorpus | None = None, *,
                  drift_threshold: float = 0.2, auto_compact: bool = False,
                  train_ratio: float | None = None,
-                 encode_backend: str = "numpy", **store_kw):
+                 encode_backend: str = "numpy",
+                 async_seal: bool = True, **store_kw):
         # Refuse non-token-stream codecs up front with an append-specific
         # error: the tail files per-string u16 token payloads
         # (_tail_string_tokens does frombuffer("<u2")) and _tail_scan walks a
@@ -134,6 +135,15 @@ class MutableStringStore(CompressedStringStore):
         self.version_id = 0          # bumped by every compact()
         self.compactions = 0
         self._dir: str | None = None  # set by save()/open(): compact() target
+        # ----- off-thread tail seals: a sealing extend() only *requests* a
+        # seal; segment construction (join + cumsum + optional index decode)
+        # runs on a background worker that commits under the lock iff the
+        # tail identity it snapshotted is still current (_tail_gen guard).
+        self.async_seal = bool(async_seal)
+        self._sealing = False                    # worker thread active
+        self._tail_gen = 0                       # bumped when the tail's
+        #                                          prefix is invalidated
+        self._seal_done_cv = threading.Condition(self._lock)
 
     @staticmethod
     def _check_token_stream(source) -> None:
@@ -272,67 +282,150 @@ class MutableStringStore(CompressedStringStore):
         return ids
 
     def seal(self) -> None:
-        """Force-seal the current tail into a (possibly short) segment."""
-        with self._lock:
+        """Force-seal the current tail into a (possibly short) segment.
+        Joins any in-flight background seal first, then seals the remainder
+        inline — on return the tail is empty."""
+        with self._seal_done_cv:
+            while self._sealing:
+                self._seal_done_cv.wait()
             self._seal_tail_locked()
+
+    def seal_barrier(self) -> None:
+        """Block until no background seal is pending: afterwards the tail
+        is strictly shorter than ``strings_per_segment`` (until the next
+        sealing extend). compact() and save() call this so their snapshots
+        never race a half-built segment."""
+        with self._seal_done_cv:
+            while self._sealing:
+                self._seal_done_cv.wait()
 
     def _ingest_locked(self, payloads: list[bytes], raw_lens: list[int],
                        assign_ids: bool = True) -> list[int]:
         """``assign_ids=False`` re-files payloads whose ids are already
         published (compact's delta re-parse) without touching ``_n_total``.
 
-        Group-commit: payloads are filed in slices that run up to the next
-        seal boundary, with one drift observation per slice (DriftMonitor
-        explicitly accepts per-batch observation) — no per-string Python
-        loop on the hot write path.
+        Group-commit: the whole batch appends to the tail with one drift
+        observation (DriftMonitor explicitly accepts per-batch observation)
+        — no per-string Python loop on the hot write path. Crossing a seal
+        boundary only *requests* sealing: the background worker builds the
+        segment off-thread (``async_seal=False`` restores inline seals).
         """
         self._dirty = True
         n = len(payloads)
         ids = list(range(self._n_total, self._n_total + n)) if assign_ids else []
-        spc = self.segments.strings_per_segment
-        pos = 0
-        while pos < n:
-            take = min(n - pos, spc - len(self._tail))
-            chunk = payloads[pos : pos + take]
-            if self._tail_map is not None:
-                start = len(self._tail)
-                for j, p in enumerate(chunk):
-                    self._tail_map.setdefault(p, start + j)
-            self._tail.extend(chunk)
-            self._tail_raw.extend(raw_lens[pos : pos + take])
-            comp = sum(map(len, chunk))
-            self._tail_bytes += comp
-            self.drift.observe(sum(raw_lens[pos : pos + take]), comp)
-            pos += take
-            if len(self._tail) >= spc:
-                self._seal_tail_locked()
+        if self._tail_map is not None:
+            start = len(self._tail)
+            for j, p in enumerate(payloads):
+                self._tail_map.setdefault(p, start + j)
+        self._tail.extend(payloads)
+        self._tail_raw.extend(raw_lens)
+        comp = sum(map(len, payloads))
+        self._tail_bytes += comp
+        self.drift.observe(sum(raw_lens), comp)
         if assign_ids:
             self._n_total += n
+        spc = self.segments.strings_per_segment
+        if len(self._tail) >= spc:
+            if self.async_seal:
+                self._request_seal_locked()
+            else:
+                while len(self._tail) >= spc:
+                    self._seal_tail_locked(spc)
         return ids
 
-    def _seal_tail_locked(self) -> None:
-        if not self._tail:
+    def _seal_tail_locked(self, k: int | None = None) -> None:
+        """Seal the first ``k`` tail strings (all of them when None) into a
+        segment, inline under the lock."""
+        n = len(self._tail)
+        k = n if k is None else min(k, n)
+        if k == 0:
             return
-        offsets = np.zeros(len(self._tail) + 1, dtype=np.int64)
-        np.cumsum([len(p) for p in self._tail], out=offsets[1:])
-        payload = np.frombuffer(b"".join(self._tail), dtype=np.uint8)
+        parts = self._tail[:k]
+        offsets = np.zeros(k + 1, dtype=np.int64)
+        np.cumsum([len(p) for p in parts], out=offsets[1:])
+        payload = np.frombuffer(b"".join(parts), dtype=np.uint8)
         # once anyone has issued a reverse lookup, keep the index current:
         # build the new segment's index at seal time (tail decoded before
         # it is cleared). Stores nobody locates in never pay this decode.
-        raw = (self._tail_scan(0, len(self._tail))
+        raw = (self._tail_scan(0, k)
                if (self._seg_indexes or self._tail_map is not None)
                else None)
-        self.segments.append_segment(payload, offsets,
-                                     raw_bytes=sum(self._tail_raw))
+        self._commit_seal_locked(k, payload, offsets,
+                                 sum(self._tail_raw[:k]), raw)
+
+    def _commit_seal_locked(self, k: int, payload: np.ndarray,
+                            offsets: np.ndarray, raw_bytes: int,
+                            raw: list[bytes] | None) -> None:
+        """Append the built segment and drop the first ``k`` tail strings.
+        Bumps ``_tail_gen``: any other in-flight seal snapshot of the old
+        tail prefix is now stale and must abandon its commit."""
+        self.segments.append_segment(payload, offsets, raw_bytes=raw_bytes)
         if raw is not None:
             seg = self.segments.segments[-1]
             self._seg_indexes[seg.index] = SegmentIndex.build(
                 seg.payload, seg.offsets, raw)
-        self._tail.clear()
-        self._tail_raw.clear()
-        self._tail_bytes = 0
+        del self._tail[:k]
+        del self._tail_raw[:k]
+        self._tail_bytes -= int(offsets[-1])
         if self._tail_map is not None:
-            self._tail_map = {}
+            # a partial seal shifts every remaining tail-local id
+            m: dict[bytes, int] = {}
+            for local, p in enumerate(self._tail):
+                m.setdefault(p, local)
+            self._tail_map = m
+        self._tail_gen += 1
+
+    def _request_seal_locked(self) -> None:
+        if self._sealing:
+            return  # worker already draining; it re-checks the boundary
+        self._sealing = True
+        threading.Thread(target=self._seal_worker, daemon=True,
+                         name="repro-seal").start()
+
+    def _seal_worker(self) -> None:
+        """Drain the tail down below the seal boundary, one segment per
+        iteration. Each round snapshots the first ``spc`` payloads under
+        the lock, builds the segment arrays (and the optional reverse-index
+        decode) OFF the lock, and commits only if neither a compaction
+        (version_id) nor a competing seal/swap (_tail_gen) invalidated the
+        snapshot meanwhile."""
+        while True:
+            with self._lock:
+                spc = self.segments.strings_per_segment
+                if len(self._tail) < spc:
+                    self._sealing = False
+                    self._seal_done_cv.notify_all()
+                    return
+                version, gen = self.version_id, self._tail_gen
+                parts = self._tail[:spc]
+                raw_bytes = sum(self._tail_raw[:spc])
+                need_raw = bool(self._seg_indexes) \
+                    or self._tail_map is not None
+                dictionary = self.dictionary
+            offsets = np.zeros(spc + 1, dtype=np.int64)
+            np.cumsum([len(p) for p in parts], out=offsets[1:])
+            payload = np.frombuffer(b"".join(parts), dtype=np.uint8)
+            raw = (self._decode_payloads(parts, dictionary)
+                   if need_raw else None)
+            with self._lock:
+                if self.version_id != version or self._tail_gen != gen:
+                    continue  # snapshot went stale: re-evaluate from scratch
+                self._commit_seal_locked(spc, payload, offsets,
+                                         raw_bytes, raw)
+
+    @staticmethod
+    def _decode_payloads(parts: list[bytes], dictionary) -> list[bytes]:
+        """Decode token-stream payloads against a *captured* dictionary
+        (the seal worker must not read self.dictionary off-lock)."""
+        counts = np.asarray([len(p) // 2 for p in parts], dtype=np.int64)
+        tokens = np.frombuffer(b"".join(parts), dtype="<u2").astype(np.int64)
+        decoded = dictionary.decode_tokens(tokens)
+        tok_lens = dictionary.lens[tokens].astype(np.int64)
+        byte_cum = np.zeros(tokens.size + 1, dtype=np.int64)
+        np.cumsum(tok_lens, out=byte_cum[1:])
+        bounds = byte_cum[np.concatenate(([0], np.cumsum(counts)))]
+        return [decoded[int(bounds[i]):int(bounds[i + 1])]
+                for i in range(len(counts))]
 
     # ------------------------------------------------------------- compaction
     def compact(self, *, sample_strings: int | None = None,
@@ -349,6 +442,7 @@ class MutableStringStore(CompressedStringStore):
         directories are pruned afterwards (``prune_old=False`` keeps them).
         """
         t0 = time.perf_counter()
+        self.seal_barrier()  # never snapshot a half-built background segment
         n0 = self.n_strings
         # decode the live data in per-segment lock windows — ids < n0 are
         # immutable, so chunked reads see the same bytes as one big scan
@@ -458,6 +552,11 @@ class MutableStringStore(CompressedStringStore):
         # un-publish, and the caller re-files any delta beyond the corpus
         self.cache.clear()
         self.drift.reset(corpus.ratio if corpus.compressed_bytes else None)
+        if self.tier is not None:
+            # cold state is segment-scoped: the rewrite folded every cold
+            # segment's data back into the new (hot) generation
+            self.tier.clear_locked()
+        self._tail_gen += 1   # in-flight seal snapshots are now stale
         self.version_id += 1
 
     # ------------------------------------------------------------- persistence
@@ -501,6 +600,7 @@ class MutableStringStore(CompressedStringStore):
         against compact()'s own save+prune (a stale generation is never
         recreated after its prune, and the manifest never points backwards).
         """
+        self.seal_barrier()  # the snapshot below must see a settled tail
         with self._io_lock:
             self._save_io_locked(dir_path)
 
@@ -513,11 +613,13 @@ class MutableStringStore(CompressedStringStore):
                 mutable=True, n_tail=len(self._tail),
                 version_id=self.version_id,
                 encode_backend=self.encode_backend,
+                async_seal=self.async_seal,
                 train_ratio=self.drift.baseline_ratio,
                 drift_raw_bytes=self.drift.raw_bytes,
                 drift_compressed_bytes=self.drift.compressed_bytes,
                 drift_observations=self.drift.observations,
-                drift_threshold=self.drift.threshold)
+                drift_threshold=self.drift.threshold,
+                **self._tier_meta_locked())
             manifest = {"format_version": 1, "current": vname,
                         "codec": artifact.codec, "n_strings": self.n_strings,
                         "compactions": self.compactions}
@@ -537,13 +639,20 @@ class MutableStringStore(CompressedStringStore):
         if index_blob is not None:
             with open(os.path.join(sub, self._INDEX_FILE), "wb") as f:
                 f.write(index_blob)
+        if meta.get("cold_segments"):
+            # the cold containers are immutable once written, so copying
+            # them after the snapshot's lock dropped cannot tear
+            self.tier.copy_cold_files(meta["cold_segments"], sub)
         write_json_atomic(os.path.join(dir_path, self._CURRENT_FILE),
                           manifest)
         # when upgrading a plain (flat) store directory to the versioned
         # layout, drop the superseded flat files: a reader must never find
         # two generations disagreeing in one directory
-        for name in (self._DICT_FILE, self._CORPUS_FILE, self._META_FILE,
-                     self._INDEX_FILE):
+        stale_names = [self._DICT_FILE, self._CORPUS_FILE, self._META_FILE,
+                       self._INDEX_FILE]
+        stale_names += [n for n in os.listdir(dir_path)
+                        if n.startswith("cold-") and n.endswith(".rlz")]
+        for name in stale_names:
             stale = os.path.join(dir_path, name)
             if os.path.exists(stale):
                 os.remove(stale)
@@ -571,6 +680,7 @@ class MutableStringStore(CompressedStringStore):
         # saved on a jax host, reopened on a numpy-only one: fall back
         eb = meta.get("encode_backend", "numpy")
         kw["encode_backend"] = eb if OnPairDevice is not None else "numpy"
+        kw["async_seal"] = meta.get("async_seal", True)
         kw.update(overrides)  # caller overrides beat every saved param
         store = cls(artifact, sealed, **kw)
         if n_tail:
@@ -590,6 +700,7 @@ class MutableStringStore(CompressedStringStore):
             store.drift.observations = int(meta["drift_observations"])
         store.version_id = int(meta.get("version_id", 0))
         store._load_index(sub)
+        store._attach_tier(sub, meta)
         store._dir = dir_path
         store._dirty = False   # tail restore above is not an unsaved append
         return store

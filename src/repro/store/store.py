@@ -113,6 +113,8 @@ class CompressedStringStore:
         # the query-side encoder (lazy: most stores never locate)
         self._seg_indexes: dict[int, SegmentIndex] = {}
         self._locate_encoder: Encoder | None = None
+        # hot/cold tiering (repro.store.tier); None until enable_tiering()
+        self.tier = None
 
         # ----- backend resolution: per-codec registry capability, not an
         # isinstance/variant16 probe — an artifact opened on a jax-less host
@@ -209,13 +211,16 @@ class CompressedStringStore:
         os.makedirs(dir_path, exist_ok=True)
         self.artifact.save(os.path.join(dir_path, self._DICT_FILE))
         self.corpus.save(os.path.join(dir_path, self._CORPUS_FILE))
-        write_json_atomic(os.path.join(dir_path, self._META_FILE),
-                          self.store_meta())
         with self._lock:
             blob = self._dump_index_locked()
+            tier_meta = self._tier_meta_locked()
+        write_json_atomic(os.path.join(dir_path, self._META_FILE),
+                          self.store_meta(**tier_meta))
         if blob is not None:
             with open(os.path.join(dir_path, self._INDEX_FILE), "wb") as f:
                 f.write(blob)
+        if tier_meta:
+            self.tier.copy_cold_files(tier_meta["cold_segments"], dir_path)
 
     @classmethod
     def open_corpus_dir(cls, dir_path: str, source,
@@ -231,6 +236,7 @@ class CompressedStringStore:
         kw.update(overrides)
         store = cls(source, corpus, **kw)
         store._load_index(dir_path)
+        store._attach_tier(dir_path, meta)
         return store
 
     @classmethod
@@ -255,6 +261,38 @@ class CompressedStringStore:
         artifact = DictArtifact.load(
             os.path.join(dir_path, cls._DICT_FILE), mmap=mmap)
         return cls.open_corpus_dir(dir_path, artifact, mmap=mmap, **overrides)
+
+    # ----------------------------------------------------------------- tiering
+    def enable_tiering(self, **params):
+        """Get-or-create the store's :class:`~repro.store.tier.TierManager`.
+        Parameters only apply on first creation; a later call with different
+        thresholds updates them in place."""
+        from repro.store.tier import TierManager
+        if self.tier is None:
+            self.tier = TierManager(self, **params)
+        elif params:
+            for k in ("demote_below", "promote_above", "halflife_s"):
+                if k in params:
+                    setattr(self.tier, k, float(params[k]))
+        return self.tier
+
+    def _tier_meta_locked(self) -> dict:
+        """store.json extras describing the tier state (``{}`` when the
+        tier is off or empty — old stores stay byte-identical)."""
+        if self.tier is None or not self.tier.cold:
+            return {}
+        return {"tier_params": self.tier.params(),
+                "cold_segments": self.tier.cold_items_locked()}
+
+    def _attach_tier(self, dir_path: str, meta: dict) -> None:
+        """Re-adopt cold segments persisted by a save (called after
+        ``_load_index`` so both sidecars validate against the same live
+        segmentation)."""
+        cold = meta.get("cold_segments")
+        if not cold:
+            return
+        tier = self.enable_tiering(**meta.get("tier_params", {}))
+        tier.attach(dir_path, cold)
 
     # -------------------------------------------------------------- tail hooks
     # A store may hold strings beyond the sealed SegmentedCorpus: the writable
@@ -313,9 +351,13 @@ class CompressedStringStore:
         segment (including segments sealed from an appended tail, which the
         construction-time corpus does not cover) + the full dictionary
         (decode matrix and LPM tables included) + decoded-string cache + any
-        unsealed tail payload."""
+        unsealed tail payload. Demoted (cold) segments do not count: their
+        payload/offsets are ``np.memmap`` views over the ``cold-*.rlz``
+        container, so the kernel can drop those pages under pressure."""
+        cold = self.tier.cold if self.tier is not None else ()
         seg_bytes = sum(s.payload_bytes + s.offsets.nbytes
-                        for s in self.segments.segments)
+                        for s in self.segments.segments
+                        if s.index not in cold)
         return (seg_bytes + self.dictionary.resident_bytes
                 + self.cache.current_bytes + self._tail_payload_bytes())
 
@@ -336,6 +378,8 @@ class CompressedStringStore:
             if not 0 <= i < n:
                 raise IndexError(f"string id {i} out of range [0, {n})")
         with self._lock:
+            if self.tier is not None:
+                self.tier.note_reads_locked(ids)
             results: dict[int, bytes] = {}
             misses: list[int] = []
             for i in ids:  # unique-preserving cache probe: duplicates decode once
@@ -376,6 +420,9 @@ class CompressedStringStore:
             if s_lo >= s_hi:
                 continue
             l0, l1 = s_lo - seg.base_id, s_hi - seg.base_id
+            if self.tier is not None and seg.index in self.tier.cold:
+                out.extend(self.tier.decode_range_locked(seg.index, l0, l1))
+                continue
             tokens = np.asarray(seg.tokens(l0, l1), dtype=np.int64)
             decoded = self.dictionary.decode_tokens(tokens)
             counts = seg.token_counts()[l0:l1]
@@ -558,6 +605,8 @@ class CompressedStringStore:
                     n_segments=self.segments.n_segments,
                     bucket_caps=[int(c) for c in self.bucket_caps],
                     memory_bytes=self.memory_bytes)
+        if self.tier is not None:
+            snap["tier"] = self.tier.snapshot()
         return snap
 
     # --------------------------------------------------------------- internals
@@ -572,6 +621,16 @@ class CompressedStringStore:
                 for k in range(len(counts))]
 
     def _decode_misses(self, misses: list[int], results: dict[int, bytes]) -> None:
+        if self.tier is not None and self.tier.cold:
+            hot, cold = self.tier.split_misses_locked(misses)
+            if cold:
+                self.tier.decode_misses_locked(cold, results)
+                for pairs in cold.values():
+                    for gid, _ in pairs:
+                        self.cache.put(gid, results[gid])
+                misses = hot
+                if not misses:
+                    return
         token_lists = [np.asarray(self._string_tokens(i), dtype=np.int32)
                        for i in misses]
         if self._device is not None:

@@ -1,0 +1,459 @@
+"""Tiered storage: mmap'd RLZ cold tier behind the hot OnPair segments.
+
+The memory-at-scale story: a store's sealed segments split into two
+temperature tiers behind one unchanged read API.
+
+* **hot** — the segment's OnPair token payload + offsets live on the heap,
+  decoded by the store's usual kernel/numpy path.
+* **cold** — the segment has been re-encoded with :mod:`repro.core.rlz`
+  against the trained dictionary's entry blob and written as a
+  ``cold-<seg>.rlz`` container next to ``index.npz``; both the RLZ factor
+  arrays *and* the original OnPair payload/offsets are reopened with
+  ``np.memmap``, so none of the segment's bytes stay resident. Point reads
+  decode from the RLZ factors (O(factors-per-string) random access); the
+  mmap'd OnPair payload keeps ``locate``/``scan_prefix``'s compressed-form
+  probes — and a later byte-exact promotion — working unchanged.
+
+Temperature is the per-segment read-rate EWMA kept by
+:class:`~repro.store.drift.DriftMonitor`: :meth:`TierManager.tick` demotes
+segments whose rate fell below ``demote_below`` on a background worker, and
+a read burst above ``promote_above`` promotes a cold segment straight back
+to the heap. ``demote``/``promote`` are also explicit operator RPCs
+(``repro.net.protocol.OP_TIER``).
+
+State machine per sealed segment::
+
+    hot --(rate <= demote_below at tick, off-thread re-encode)--> cold
+    cold --(rate >= promote_above, or explicit promote)---------> hot
+
+Obs: ``repro_store_tier_bytes{tier=hot|cold}`` gauges and the
+``repro_store_cold_get_latency_us`` histogram.
+"""
+
+from __future__ import annotations
+
+import os
+import queue
+import shutil
+import tempfile
+import threading
+import time
+import zlib
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.artifact import read_container, write_container
+from repro.core.rlz import RLZCodec, decode_ids, rlz_nbytes
+from repro.obs import REGISTRY
+from repro.store.drift import DriftMonitor
+
+#: container header ``kind`` of a cold-segment file
+COLD_KIND = "rlz_segment"
+
+
+def cold_file_name(seg_index: int) -> str:
+    return f"cold-{seg_index:04d}.rlz"
+
+
+@dataclass
+class ColdSegment:
+    """Bookkeeping for one demoted segment (all arrays are memmap views)."""
+
+    index: int
+    base_id: int
+    n_strings: int
+    path: str
+    arrays: dict = field(repr=False)          # RLZ factor arrays (mmap)
+    rlz_bytes: int = 0                        # encoded factor-array size
+    payload_bytes: int = 0                    # original OnPair payload size
+
+
+class TierManager:
+    """Hot/cold tier control for one store's sealed segments.
+
+    Created via :meth:`repro.store.store.CompressedStringStore.enable_tiering`;
+    all mutation of ``self.cold`` (and of segment payloads) happens under the
+    store's lock, so the read path can consult it without extra locking.
+    """
+
+    def __init__(self, store, *, demote_below: float = 0.05,
+                 promote_above: float = 1.0, halflife_s: float = 30.0,
+                 min_match: int = 8, workdir: str | None = None):
+        self.store = store
+        self.demote_below = float(demote_below)
+        self.promote_above = float(promote_above)
+        self.halflife_s = float(halflife_s)
+        self.min_match = int(min_match)
+        #: segment index -> ColdSegment for every currently-cold segment
+        self.cold: dict[int, ColdSegment] = {}
+        self.demotions = 0
+        self.promotions = 0
+        self._workdir = workdir
+        # temperature signal: the writable store's DriftMonitor when it has
+        # one, a private monitor for read-only stores
+        drift = getattr(store, "drift", None)
+        self._drift: DriftMonitor = drift if drift is not None \
+            else DriftMonitor()
+        self._drift.read_halflife_s = self.halflife_s
+        # per-generation RLZ codec + reference CRC caches
+        self._codec: RLZCodec | None = None
+        self._codec_version = -1
+        self._crc: tuple[int, int] | None = None
+        # off-thread demotion worker (started lazily, one at a time)
+        self._jobs: queue.Queue = queue.Queue()
+        self._worker: threading.Thread | None = None
+        self._gauge_hot = REGISTRY.gauge("repro_store_tier_bytes", tier="hot")
+        self._gauge_cold = REGISTRY.gauge("repro_store_tier_bytes",
+                                          tier="cold")
+        self._cold_lat = REGISTRY.histogram("repro_store_cold_get_latency_us")
+        self._update_gauges_locked()
+
+    # ------------------------------------------------------------ temperature
+    def note_reads_locked(self, ids) -> None:
+        """Update per-segment read rates from one multiget's ids (called
+        under the store lock) and promote any cold segment whose rate just
+        crossed ``promote_above`` — the read-burst promotion path."""
+        segs = self.store.segments
+        n_sealed = segs.n_strings
+        sealed = [i for i in ids if i < n_sealed]
+        if not sealed:
+            return
+        ks = np.searchsorted(np.asarray(segs._base_ids, dtype=np.int64),
+                             np.asarray(sealed, dtype=np.int64),
+                             side="right") - 1
+        uk, uc = np.unique(ks, return_counts=True)
+        now = time.perf_counter()
+        counts = {segs.segments[int(k)].index: int(c)
+                  for k, c in zip(uk, uc)}
+        self._drift.note_reads(counts, now=now)
+        for si in counts:
+            if si in self.cold and \
+                    self._drift.read_rate(si, now=now) >= self.promote_above:
+                self._promote_locked(si)
+
+    def tick(self, now: float | None = None) -> list[int]:
+        """Scan sealed segments; schedule off-thread demotion for every hot
+        segment whose read rate is at or below ``demote_below``. Returns the
+        scheduled segment indexes (demotions complete asynchronously; call
+        :meth:`join` to wait)."""
+        now = time.perf_counter() if now is None else now
+        cands = []
+        with self.store._lock:
+            for seg in self.store.segments.segments:
+                if seg.n_strings == 0 or seg.index in self.cold:
+                    continue
+                if self._drift.read_rate(seg.index, now=now) \
+                        <= self.demote_below:
+                    cands.append(seg.index)
+        for si in cands:
+            self.schedule_demote(si)
+        return cands
+
+    def schedule_demote(self, seg_index: int) -> None:
+        """Queue one segment for off-thread demotion."""
+        if self._worker is None or not self._worker.is_alive():
+            self._worker = threading.Thread(
+                target=self._worker_loop, daemon=True, name="repro-tier")
+            self._worker.start()
+        self._jobs.put(int(seg_index))
+
+    def join(self) -> None:
+        """Block until every queued demotion has been processed."""
+        self._jobs.join()
+
+    def _worker_loop(self) -> None:
+        while True:
+            si = self._jobs.get()
+            try:
+                self.demote(si)
+            except Exception:  # pragma: no cover - demotion is best-effort
+                pass
+            finally:
+                self._jobs.task_done()
+
+    # --------------------------------------------------------- demote/promote
+    def demote(self, seg_index: int) -> dict | None:
+        """Re-encode one sealed segment as RLZ and swap its arrays to mmap
+        views. Factorization and the container write run outside the store
+        lock; the final adoption re-checks that no compaction swapped the
+        generation meanwhile. Returns a report dict, or None when the
+        segment is absent, empty, or already cold."""
+        store = self.store
+        with store._lock:
+            segs = store.segments.segments
+            if not 0 <= seg_index < len(segs):
+                return None
+            seg = segs[seg_index]
+            if seg.index in self.cold or seg.n_strings == 0:
+                return None
+            version = getattr(store, "version_id", 0)
+            raw = store._scan_locked(seg.base_id, seg.base_id + seg.n_strings)
+            payload = np.asarray(seg.payload, dtype=np.uint8)
+            offsets = np.asarray(seg.offsets, dtype=np.int64)
+            dictionary = store.dictionary
+            codec = self._codec_for_locked(dictionary, version)
+            ref_crc = self._ref_crc_locked(dictionary, version)
+        arrays = codec.factorize(raw)
+        encoded = rlz_nbytes(arrays)
+        arrays["payload"] = payload
+        arrays["offsets"] = offsets
+        header = {"kind": COLD_KIND, "segment": int(seg.index),
+                  "base_id": int(seg.base_id),
+                  "n_strings": int(seg.n_strings),
+                  "raw_bytes": int(sum(len(s) for s in raw)),
+                  "min_match": codec.min_match, "ref_crc": ref_crc,
+                  "payload_bytes": int(payload.size)}
+        path = os.path.join(self._ensure_workdir(),
+                            cold_file_name(seg.index))
+        write_container(path, header, arrays)
+        with store._lock:
+            current = store.segments.segments
+            if getattr(store, "version_id", 0) != version \
+                    or seg_index >= len(current) \
+                    or current[seg_index] is not seg \
+                    or seg.index in self.cold:
+                return None  # generation swapped mid-encode: abandon
+            self._adopt_locked(seg, path)
+            self.demotions += 1
+            return {"segment": seg.index,
+                    "payload_bytes": header["payload_bytes"],
+                    "rlz_bytes": encoded,
+                    "raw_bytes": header["raw_bytes"]}
+
+    def _adopt_locked(self, seg, path: str,
+                      opened: tuple[dict, dict] | None = None) -> None:
+        """Point ``seg`` at the cold container's mmap arrays and register
+        the ColdSegment. ``opened`` passes an already-read container."""
+        header, arrays = opened if opened is not None \
+            else read_container(path, mmap=True)
+        rlz = {k: arrays[k] for k in ("starts", "offs", "lens", "literals")}
+        seg.payload = arrays["payload"]
+        seg.offsets = arrays["offsets"]
+        self.cold[seg.index] = ColdSegment(
+            index=seg.index, base_id=seg.base_id, n_strings=seg.n_strings,
+            path=path, arrays=rlz,
+            rlz_bytes=int(sum(np.asarray(a).nbytes for a in rlz.values())),
+            payload_bytes=int(header.get("payload_bytes", seg.payload.size)))
+        self._update_gauges_locked()
+
+    def promote(self, seg_index: int) -> bool:
+        """Copy a cold segment's OnPair arrays back onto the heap (byte-
+        exact: the mmap'd payload IS the original encoding). The container
+        file stays on disk; only segments listed cold at save time are
+        re-attached on open."""
+        with self.store._lock:
+            return self._promote_locked(seg_index)
+
+    def _promote_locked(self, seg_index: int) -> bool:
+        cold = self.cold.pop(seg_index, None)
+        if cold is None:
+            return False
+        seg = self.store.segments.segments[seg_index]
+        seg.payload = np.array(seg.payload, dtype=np.uint8, copy=True)
+        seg.offsets = np.array(seg.offsets, dtype=np.int64, copy=True)
+        self.promotions += 1
+        self._update_gauges_locked()
+        return True
+
+    # -------------------------------------------------------------- cold read
+    def split_misses_locked(self, misses: list[int]
+                            ) -> tuple[list[int], dict[int, list[tuple]]]:
+        """Partition multiget misses into hot ids and
+        ``{segment: [(gid, local), ...]}`` cold groups."""
+        hot: list[int] = []
+        cold: dict[int, list[tuple]] = {}
+        segs = self.store.segments
+        n_sealed = segs.n_strings
+        for i in misses:
+            if i < n_sealed:
+                seg, local = segs.route(i)
+                if seg.index in self.cold:
+                    cold.setdefault(seg.index, []).append((i, local))
+                    continue
+            hot.append(i)
+        return hot, cold
+
+    def decode_misses_locked(self, cold: dict[int, list[tuple]],
+                             results: dict[int, bytes]) -> int:
+        """Decode cold misses from their RLZ factor arrays; fills
+        ``results`` and records the cold-get latency histogram."""
+        t0 = time.perf_counter()
+        ref = self._reference()
+        n = 0
+        for si, pairs in cold.items():
+            cs = self.cold[si]
+            vals = decode_ids(ref, cs.arrays, [loc for _, loc in pairs])
+            for (gid, _), v in zip(pairs, vals):
+                results[gid] = v
+            n += len(pairs)
+        self._cold_lat.record_seconds(time.perf_counter() - t0)
+        stats = getattr(self.store, "stats", None)
+        if stats is not None:
+            stats.cold_lookups += n
+        return n
+
+    def decode_range_locked(self, seg_index: int,
+                            lo: int, hi: int) -> list[bytes]:
+        """Scan path: decode a cold segment's local range from RLZ."""
+        cs = self.cold[seg_index]
+        return decode_ids(self._reference(), cs.arrays,
+                          np.arange(lo, hi, dtype=np.int64))
+
+    def _reference(self) -> np.ndarray:
+        return np.asarray(self.store.dictionary.blob, dtype=np.uint8)
+
+    # ------------------------------------------------------------ persistence
+    def params(self) -> dict:
+        return {"demote_below": self.demote_below,
+                "promote_above": self.promote_above,
+                "halflife_s": self.halflife_s,
+                "min_match": self.min_match}
+
+    def cold_items_locked(self) -> list[dict]:
+        """Snapshot of the cold set for a save (call under the store lock):
+        the container files are immutable once written, so copying them
+        after the lock drops is safe."""
+        return [{"segment": cs.index, "file": cold_file_name(cs.index),
+                 "base_id": cs.base_id, "n_strings": cs.n_strings,
+                 "path": cs.path}
+                for cs in self.cold.values()]
+
+    def copy_cold_files(self, items: list[dict], dir_path: str) -> None:
+        """Materialise a save snapshot's cold containers in ``dir_path``."""
+        for it in items:
+            dst = os.path.join(dir_path, it["file"])
+            if os.path.abspath(it["path"]) != os.path.abspath(dst):
+                shutil.copyfile(it["path"], dst)
+
+    def attach(self, dir_path: str, cold_meta: list[dict]) -> int:
+        """Re-adopt persisted cold segments on open. Every entry is
+        validated against the live segmentation (position, base id, count)
+        and the dictionary generation (reference CRC); mismatches are left
+        hot — same silently-rebuild contract as the index sidecar. Future
+        demotions write next to the attached files."""
+        store = self.store
+        self._workdir = dir_path
+        adopted = 0
+        with store._lock:
+            version = getattr(store, "version_id", 0)
+            ref_crc = self._ref_crc_locked(store.dictionary, version)
+            segs = store.segments.segments
+            for item in cold_meta:
+                si = int(item["segment"])
+                path = os.path.join(dir_path, item["file"])
+                if si >= len(segs) or si in self.cold \
+                        or not os.path.exists(path):
+                    continue
+                seg = segs[si]
+                if seg.n_strings == 0 \
+                        or seg.base_id != int(item.get("base_id", -1)) \
+                        or seg.n_strings != int(item.get("n_strings", -1)):
+                    continue
+                try:
+                    header, arrays = read_container(path, mmap=True)
+                except Exception:
+                    continue
+                if header.get("kind") != COLD_KIND \
+                        or header.get("ref_crc") != ref_crc \
+                        or header.get("n_strings") != seg.n_strings:
+                    continue
+                self._adopt_locked(seg, path, opened=(header, arrays))
+                adopted += 1
+        return adopted
+
+    def clear_locked(self) -> None:
+        """Drop all tier state (compaction swapped the segments out from
+        under it; the rewrite folded cold data back into hot segments)."""
+        self.cold.clear()
+        self._codec = None
+        self._codec_version = -1
+        self._crc = None
+        self._drift._read_ewma.clear()
+        self._update_gauges_locked()
+
+    # -------------------------------------------------------------- reporting
+    def hot_bytes_locked(self) -> int:
+        return sum(s.payload_bytes + s.offsets.nbytes
+                   for s in self.store.segments.segments
+                   if s.index not in self.cold)
+
+    def cold_bytes_locked(self) -> int:
+        return sum(s.payload_bytes + s.offsets.nbytes
+                   for s in self.store.segments.segments
+                   if s.index in self.cold)
+
+    def snapshot(self) -> dict:
+        now = time.perf_counter()
+        return {"cold_segments": sorted(self.cold),
+                "n_cold": len(self.cold),
+                "n_segments": self.store.segments.n_segments,
+                "demotions": self.demotions,
+                "promotions": self.promotions,
+                "cold_payload_bytes": sum(cs.payload_bytes
+                                          for cs in self.cold.values()),
+                "rlz_bytes": sum(cs.rlz_bytes for cs in self.cold.values()),
+                "read_rates": {int(k): round(v, 4) for k, v in
+                               self._drift.read_rates(now=now).items()},
+                "params": self.params(),
+                "cold_latency": self._cold_lat.summary()}
+
+    # --------------------------------------------------------------- internal
+    def _ensure_workdir(self) -> str:
+        if self._workdir is None:
+            self._workdir = tempfile.mkdtemp(prefix="repro-tier-")
+        else:
+            os.makedirs(self._workdir, exist_ok=True)
+        return self._workdir
+
+    def _codec_for_locked(self, dictionary, version: int) -> RLZCodec:
+        if self._codec is None or self._codec_version != version:
+            self._codec = RLZCodec(
+                np.asarray(dictionary.blob, dtype=np.uint8),
+                min_match=self.min_match)
+            self._codec_version = version
+        return self._codec
+
+    def _ref_crc_locked(self, dictionary, version: int) -> int:
+        if self._crc is None or self._crc[0] != version:
+            blob = np.ascontiguousarray(
+                np.asarray(dictionary.blob, dtype=np.uint8))
+            self._crc = (version, int(zlib.crc32(blob.tobytes())))
+        return self._crc[1]
+
+    def _update_gauges_locked(self) -> None:
+        self._gauge_hot.set(float(self.hot_bytes_locked()))
+        self._gauge_cold.set(float(self.cold_bytes_locked()))
+
+
+def tier_op(store, action: str = "stats", segment: int | None = None,
+            params: dict | None = None) -> dict:
+    """One tier control operation against a single store — the shared
+    server-side implementation of the ``OP_TIER`` RPC and the in-process
+    router's tier methods.
+
+    ``stats`` never enables tiering (``{"enabled": False}`` when off);
+    ``demote``/``promote`` enable it on first use, act on one segment, or —
+    with ``segment=None`` — on every eligible segment (demote: every hot
+    sealed segment; promote: every cold one).
+    """
+    if action == "stats":
+        tier = getattr(store, "tier", None)
+        if tier is None:
+            return {"enabled": False}
+        return {"enabled": True, **tier.snapshot()}
+    if action not in ("demote", "promote"):
+        raise ValueError(f"unknown tier action {action!r} "
+                         "(one of 'stats', 'demote', 'promote')")
+    tier = store.enable_tiering(**(params or {}))
+    if action == "demote":
+        if segment is None:
+            idxs = [s.index for s in store.segments.segments if s.n_strings]
+        else:
+            idxs = [int(segment)]
+        done = [r["segment"] for r in map(tier.demote, idxs)
+                if r is not None]
+        return {"enabled": True, "demoted": done, "n_cold": len(tier.cold)}
+    idxs = sorted(tier.cold) if segment is None else [int(segment)]
+    done = [si for si in idxs if tier.promote(si)]
+    return {"enabled": True, "promoted": done, "n_cold": len(tier.cold)}

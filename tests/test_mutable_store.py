@@ -85,6 +85,7 @@ def test_store_can_start_empty(artifact, titles):
     ids = store.extend(titles[:SPS + 5])
     assert ids[0] == 0 and store.n_strings == SPS + 5
     assert store.scan(0, SPS + 5) == titles[:SPS + 5]
+    store.seal_barrier()                   # let the background seal land
     assert store.segments.n_segments == 1  # one sealed + 5 in tail
 
 
@@ -94,6 +95,7 @@ def test_seal_boundary_exactly_full_tail(artifact, titles):
     store = _mutable(artifact, base)
     n_seg0 = store.segments.n_segments
     store.extend(titles[SPS : 2 * SPS])           # exactly fills one tail
+    store.seal_barrier()
     snap = store.stats_snapshot()
     assert snap["n_tail_strings"] == 0            # sealed, nothing left over
     assert store.segments.n_segments == n_seg0 + 1
@@ -425,6 +427,7 @@ def test_memory_bytes_stable_across_seal(artifact, titles):
 
     store2 = _mutable(artifact, titles[:SPS], cache_bytes=0)
     store2.extend(titles[SPS : 2 * SPS])          # seals a full segment
+    store2.seal_barrier()
     seg_bytes = sum(s.payload_bytes + s.offsets.nbytes
                     for s in store2.segments.segments)
     assert store2.memory_bytes >= seg_bytes

@@ -1,0 +1,412 @@
+"""Tiered storage: the RLZ cold tier and temperature-driven movement.
+
+Covers the RLZ codec itself (round-trips, literals-only pathologies), the
+byte-identity contract — a majority-demoted store must answer every read
+API identically to its all-hot twin, across save→open, demote→promote and
+compact() — the memory win that justifies the tier, the per-segment
+read-rate EWMA, off-thread demotion + read-burst promotion, the OP_TIER
+RPC through a real server, the sharded/client fan-out, the loadgen
+cold-skew knob's determinism guard, and the async tail-seal satellite.
+Everything runs on a numpy-only host."""
+
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import registry
+from repro.core.codec import Encoder
+from repro.core.rlz import RLZCodec, decode_ids, decode_range, rlz_nbytes
+from repro.data.synth import load_dataset
+from repro.distributed import ShardedStringStore, save_sharded
+from repro.loadgen import WorkloadSpec, build_schedule
+from repro.net import RemoteShardClient, ShardServer
+from repro.store import (CompressedStringStore, DriftMonitor,
+                         MutableStringStore, tier_op)
+
+SAMPLE = 1 << 18
+SPS = 128  # small segments so a corpus spans many demotion candidates
+COLD = {"promote_above": 1e9}  # keep segments cold under test read loops
+
+
+@pytest.fixture(scope="module")
+def titles():
+    strings = load_dataset("book_titles", SAMPLE)
+    strings[3] = b""
+    strings[7] = b"\x00\xff" * 9
+    return strings
+
+
+@pytest.fixture(scope="module")
+def artifact(titles):
+    return registry.train("onpair16", titles, sample_bytes=SAMPLE)
+
+
+def _store(titles, n=1000, **kw):
+    kw.setdefault("strings_per_segment", SPS)
+    kw.setdefault("sample_bytes", SAMPLE)
+    return CompressedStringStore.build(titles[:n], **kw)
+
+
+def _demote_all(store, **params):
+    tier = store.enable_tiering(**{**COLD, **params})
+    for seg in store.segments.segments:
+        tier.demote(seg.index)
+    return tier
+
+
+def _assert_reads_identical(store, titles, n):
+    rng = np.random.default_rng(7)
+    ids = rng.integers(0, n, 200).tolist()
+    assert store.multiget(ids) == [titles[i] for i in ids]
+    for i in (0, 3, 7, n // 2, n - 1):
+        assert store.get(i) == titles[i]
+    assert store.scan(0, n) == titles[:n]
+    assert store.scan(SPS - 3, SPS + 3) == titles[SPS - 3:SPS + 3]
+
+
+# ------------------------------------------------------------- RLZ codec
+def test_rlz_roundtrip_against_reference(titles):
+    ref = b"".join(titles[:50])
+    codec = RLZCodec(ref)
+    strings = titles[50:250] + [b"", b"\x00" * 3, titles[60], titles[60]]
+    arrays = codec.factorize(strings)
+    assert decode_ids(ref, arrays, range(len(strings))) == strings
+    # random access: any subset, any order
+    assert decode_ids(ref, arrays, [203, 0, 17]) == [
+        strings[203], strings[0], strings[17]]
+    assert decode_range(ref, arrays, 5, 9) == strings[5:9]
+    assert arrays["starts"].shape == (len(strings) + 1,)
+
+
+def test_rlz_literals_only_when_nothing_matches():
+    codec = RLZCodec(b"aaaaaaaaaaaaaaaa", min_match=8)
+    rng = np.random.default_rng(0)
+    strings = [rng.integers(0, 256, 40, dtype=np.uint8).tobytes()
+               for _ in range(20)]
+    arrays = codec.factorize(strings)
+    assert decode_ids(b"aaaaaaaaaaaaaaaa", arrays, range(20)) == strings
+    # incompressible input: the literals blob carries ~everything
+    assert arrays["literals"].size >= sum(map(len, strings)) * 0.9
+
+
+def test_rlz_compresses_redundant_strings(titles):
+    ref = b"".join(titles[:200])
+    arrays = RLZCodec(ref).factorize(titles[:200])  # self-referential corpus
+    assert rlz_nbytes(arrays) < sum(map(len, titles[:200]))
+
+
+def test_rlz_empty_input():
+    arrays = RLZCodec(b"abcdefgh" * 4).factorize([])
+    assert decode_ids(b"abcdefgh" * 4, arrays, []) == []
+    assert rlz_nbytes(arrays) >= 0
+
+
+# ---------------------------------------------- byte-identity hot vs cold
+def test_demoted_store_reads_byte_identical(titles):
+    n = 1000
+    store = _store(titles, n)
+    tier = _demote_all(store)
+    assert len(tier.cold) == store.segments.n_segments
+    _assert_reads_identical(store, titles, n)
+    assert store.stats.cold_lookups > 0  # misses decoded from RLZ
+    # cached entries short-circuit before the tier split
+    hits0 = store.cache.hits
+    cold0 = store.stats.cold_lookups
+    store.multiget([0, 1, 2])
+    store.multiget([0, 1, 2])
+    assert store.cache.hits > hits0
+    assert store.stats.cold_lookups <= cold0 + 3
+
+
+def test_locate_and_scan_prefix_on_cold_segments(titles):
+    n = 600
+    store = _store(titles, n)
+    hot_locate = [store.locate(titles[i]) for i in range(0, n, 13)]
+    prefix = titles[5][:4]
+    hot_prefix = store.scan_prefix(prefix, limit=None)
+    _demote_all(store)
+    assert [store.locate(titles[i]) for i in range(0, n, 13)] == hot_locate
+    assert store.locate(b"@@definitely-absent@@") is None
+    assert store.scan_prefix(prefix, limit=None) == hot_prefix
+
+
+def test_memory_drops_at_least_40pct_when_majority_cold(titles):
+    # payload-dominated corpus: enough strings that segment bytes dwarf the
+    # dictionary's fixed resident cost, as the acceptance criterion requires
+    corpus = (titles * 6)[:24_000]
+    n = len(corpus)
+    store = _store(corpus, n, cache_bytes=0)
+    before = store.memory_bytes
+    tier = _demote_all(store)
+    assert len(tier.cold) >= store.segments.n_segments // 2  # majority cold
+    after = store.memory_bytes
+    assert after <= before * 0.6, (before, after)
+    _assert_reads_identical(store, corpus, n)
+
+
+def test_save_open_preserves_cold_tier(titles, tmp_path):
+    n = 800
+    store = _store(titles, n)
+    _demote_all(store)
+    d = str(tmp_path / "cold")
+    store.save(d)
+    names = os.listdir(d)
+    assert any(f.startswith("cold-") and f.endswith(".rlz") for f in names)
+
+    re = CompressedStringStore.open(d)
+    assert re.tier is not None and len(re.tier.cold) > 0
+    assert re.tier.promote_above == pytest.approx(COLD["promote_above"])
+    _assert_reads_identical(re, titles, n)
+    re.cache.clear()
+    re.multiget(list(range(0, n, 5)))
+    assert re.stats.cold_lookups > 0
+
+
+def test_save_without_tier_writes_no_cold_files(titles, tmp_path):
+    store = _store(titles, 300)
+    d = str(tmp_path / "plain")
+    store.save(d)
+    assert not any(f.startswith("cold-") for f in os.listdir(d))
+    re = CompressedStringStore.open(d)
+    assert re.tier is None
+    assert tier_op(re, "stats") == {"enabled": False}
+
+
+def test_promote_restores_heap_arrays(titles):
+    n = 500
+    store = _store(titles, n)
+    tier = _demote_all(store)
+    seg0 = store.segments.segments[0]
+    assert isinstance(seg0.payload, np.memmap)
+    assert tier.promote(0) and not tier.promote(0)  # second is a no-op
+    assert 0 not in tier.cold
+    assert not isinstance(store.segments.segments[0].payload, np.memmap)
+    assert tier.promotions == 1
+    _assert_reads_identical(store, titles, n)
+    snap = store.stats_snapshot()["tier"]
+    assert snap["n_cold"] == len(tier.cold)
+    assert snap["demotions"] == tier.demotions and snap["promotions"] == 1
+
+
+def test_read_burst_promotes_cold_segment(titles):
+    store = _store(titles, 500)
+    tier = store.enable_tiering(promote_above=0.001, halflife_s=30.0)
+    assert tier.demote(0) is not None
+    for _ in range(3):
+        store.multiget(list(range(0, SPS)))
+    assert 0 not in tier.cold and tier.promotions >= 1
+
+
+def test_tick_demotes_idle_segments_off_thread(titles):
+    store = _store(titles, 500)
+    tier = store.enable_tiering(demote_below=0.05, **COLD)
+    scheduled = tier.tick()
+    tier.join()
+    assert scheduled and len(tier.cold) == len(scheduled)
+    worker = tier._worker
+    assert worker is not None and worker.daemon
+    _assert_reads_identical(store, titles, 500)
+
+
+def test_compact_folds_cold_tier_back_hot(titles, artifact):
+    corpus = Encoder(artifact).encode(titles[:400])
+    store = MutableStringStore(artifact, corpus, strings_per_segment=SPS)
+    _demote_all(store)
+    assert len(store.tier.cold) > 0
+    store.compact()
+    assert store.tier.cold == {}  # rewrite folded everything back in
+    assert store.scan(0, 400) == titles[:400]
+    assert not isinstance(store.segments.segments[0].payload, np.memmap)
+
+
+def test_mutable_save_open_roundtrip_with_cold_tail(titles, artifact,
+                                                    tmp_path):
+    corpus = Encoder(artifact).encode(titles[:300])
+    store = MutableStringStore(artifact, corpus, strings_per_segment=SPS)
+    store.extend(titles[300:350])                 # unsealed tail stays hot
+    _demote_all(store)
+    d = str(tmp_path / "mcold")
+    store.save(d)
+    re = MutableStringStore.open(d)
+    assert re.tier is not None and len(re.tier.cold) > 0
+    assert re.scan(0, 350) == titles[:350]
+    ids = re.extend(titles[350:400])              # still writable
+    assert ids == list(range(350, 400))
+    assert re.get(399) == titles[399]
+
+
+# ---------------------------------------------------- temperature (EWMA)
+def test_read_rate_ewma_decays_with_halflife():
+    m = DriftMonitor(read_halflife_s=10.0)
+    m.note_reads({0: 100}, now=0.0)
+    r0 = m.read_rate(0, now=0.0)
+    assert r0 > 0
+    # one halflife later the decayed mass (and rate) halves
+    m.note_reads({0: 0}, now=10.0)
+    assert m.read_rate(0, now=10.0) == pytest.approx(r0 / 2)
+    # unknown segment reads as stone cold
+    assert m.read_rate(99, now=10.0) == 0.0
+    assert set(m.read_rates(now=10.0)) == {0}
+    m.reset()
+    assert m.read_rates() == {}
+
+
+def test_read_rate_accumulates_sustained_traffic():
+    m = DriftMonitor(read_halflife_s=5.0)
+    for t in range(10):
+        m.note_reads({0: 50, 1: 1}, now=float(t))
+    assert m.read_rate(0, now=9.0) > m.read_rate(1, now=9.0) > 0
+
+
+# ----------------------------------------------------------- tier_op API
+def test_tier_op_demote_promote_all(titles):
+    store = _store(titles, 500)
+    r = tier_op(store, "demote", params=COLD)
+    assert r["enabled"] and r["n_cold"] == len(r["demoted"]) > 0
+    again = tier_op(store, "demote", params=COLD)
+    assert again["demoted"] == []                 # idempotent
+    stats = tier_op(store, "stats")
+    assert stats["enabled"] and stats["n_cold"] == r["n_cold"]
+    assert stats["rlz_bytes"] > 0
+    p = tier_op(store, "promote")
+    assert sorted(p["promoted"]) == sorted(r["demoted"])
+    assert p["n_cold"] == 0
+    with pytest.raises(ValueError):
+        tier_op(store, "defrost")
+
+
+def test_tier_op_single_segment(titles):
+    store = _store(titles, 500)
+    r = tier_op(store, "demote", segment=1, params=COLD)
+    assert r["demoted"] == [1] and r["n_cold"] == 1
+    assert tier_op(store, "promote", segment=1)["promoted"] == [1]
+
+
+# ------------------------------------------------------------ OP_TIER RPC
+def test_tier_rpc_through_shard_server(titles, tmp_path):
+    d = str(tmp_path / "served")
+    _store(titles, 600).save(d)
+    with ShardServer.from_dir(d).start() as server:
+        client = RemoteShardClient(server.address)
+        try:
+            assert client.supports_tier
+            assert client.tier() == {"enabled": False}
+            r = client.tier("demote", params=COLD)
+            assert r["n_cold"] > 0
+            ids = list(range(0, 600, 11))
+            assert client.multiget(ids) == [titles[i] for i in ids]
+            stats = client.tier("stats")
+            assert stats["enabled"] and stats["n_cold"] == r["n_cold"]
+            assert client.tier("promote")["n_cold"] == 0
+        finally:
+            client.close()
+
+
+def test_sharded_store_tier_fanout(titles, tmp_path):
+    store = _store(titles, 600)
+    d = str(tmp_path / "sharded")
+    save_sharded(store, d, 2)
+    sharded = ShardedStringStore.open(d)
+    rows = sharded.tier_stats()
+    assert len(rows) == 2 and all(not r["enabled"] for r in rows)
+    demoted = sharded.demote(**COLD)
+    assert all(r["n_cold"] > 0 for r in demoted)
+    ids = list(range(0, 600, 9))
+    assert sharded.multiget(ids) == [titles[i] for i in ids]
+    one = sharded.demote(shard=0, segment=0, **COLD)
+    assert len(one) == 1
+    with pytest.raises(ValueError):
+        sharded.tier(segment=0)                   # segment needs a shard
+    assert all(r["n_cold"] == 0 for r in sharded.promote())
+
+
+# --------------------------------------------------- loadgen cold-skew
+def test_cold_fraction_zero_keeps_schedules_identical(titles):
+    base = WorkloadSpec(mix={"get": 1.0}, seed=3)
+    knob = WorkloadSpec(mix={"get": 1.0}, seed=3, cold_fraction=0.0,
+                        cold_band=0.25)
+    assert build_schedule(base, 5000, 400) == build_schedule(knob, 5000, 400)
+
+
+def test_cold_fraction_redirects_reads_into_band(titles):
+    spec = WorkloadSpec(mix={"get": 1.0}, seed=3, cold_fraction=0.5,
+                        cold_band=0.25)
+    n = 10_000
+    sched = build_schedule(spec, n, 2000)
+    band0 = int(n * 0.75)
+    frac = np.mean([op.ids[0] >= band0 for op in sched])
+    # zipf alone lands <10% of reads in the top quartile; the knob forces
+    # roughly half the draws there
+    assert 0.35 < frac < 0.7
+    # determinism: same spec, same schedule
+    assert build_schedule(spec, n, 2000) == sched
+    with pytest.raises(ValueError):
+        WorkloadSpec(cold_fraction=1.5)
+    with pytest.raises(ValueError):
+        WorkloadSpec(cold_band=0.0)
+
+
+# ----------------------------------------------------- async tail seals
+def test_async_seal_commits_off_thread(titles, artifact):
+    corpus = Encoder(artifact).encode(titles[:SPS])
+    store = MutableStringStore(artifact, corpus, strings_per_segment=SPS)
+    assert store.async_seal
+    store.extend(titles[SPS:SPS * 3 + 10])
+    store.seal_barrier()
+    assert store.segments.n_segments == 3
+    assert store.stats_snapshot()["n_tail_strings"] == 10
+    assert store.scan(0, SPS * 3 + 10) == titles[:SPS * 3 + 10]
+
+
+def test_sync_seal_mode_still_available(titles, artifact):
+    store = MutableStringStore(artifact, None, strings_per_segment=SPS,
+                               async_seal=False)
+    store.extend(titles[:SPS * 2 + 5])
+    # no barrier needed: seals happened inline during extend
+    assert store.segments.n_segments == 2
+    assert store.scan(0, SPS * 2 + 5) == titles[:SPS * 2 + 5]
+
+
+def test_async_seal_flag_survives_save_open(titles, artifact, tmp_path):
+    store = MutableStringStore(artifact, None, strings_per_segment=SPS,
+                               async_seal=False)
+    store.extend(titles[:100])
+    d = str(tmp_path / "sync")
+    store.save(d)
+    assert MutableStringStore.open(d).async_seal is False
+
+
+def test_save_during_pending_seal_waits_for_commit(titles, artifact,
+                                                   tmp_path):
+    store = MutableStringStore(artifact, None, strings_per_segment=SPS)
+    store.extend(titles[:SPS * 2])
+    d = str(tmp_path / "pend")
+    store.save(d)                                 # joins the pending seal
+    re = MutableStringStore.open(d)
+    assert re.scan(0, SPS * 2) == titles[:SPS * 2]
+
+
+def test_concurrent_readers_during_async_seals(titles, artifact):
+    store = MutableStringStore(artifact, None, strings_per_segment=SPS)
+    store.extend(titles[:50])
+    errors = []
+
+    def reader():
+        try:
+            for _ in range(200):
+                n = store.n_strings
+                got = store.multiget([0, n - 1])
+                assert got[0] == titles[0]
+        except Exception as e:  # pragma: no cover - failure reporting
+            errors.append(e)
+
+    t = threading.Thread(target=reader)
+    t.start()
+    for lo in range(50, SPS * 4, 50):
+        store.extend(titles[lo:lo + 50])
+    t.join()
+    store.seal_barrier()
+    assert not errors
+    assert store.scan(0, SPS * 4) == titles[:SPS * 4]
